@@ -1,0 +1,106 @@
+"""Beyond-paper: fault-tolerance and straggler-mitigation benchmarks
+(DESIGN.md §7) — worker failure mid-experiment, hedged dispatch, and
+elastic multi-worker scaling. Not a paper table; required for the
+1000+-node operating envelope."""
+
+from __future__ import annotations
+
+from repro.serving.simulator import SimConfig
+
+from .common import SEEDS, fmt_table, mean, run_experiment, save_json
+
+
+def run() -> dict:
+    out = {}
+    # 1) failure injection: one worker dies during each burst
+    base, fail = [], []
+    retries, lost = [], []
+    for seed in SEEDS:
+        _, _, m0 = run_experiment("sjf", bias=True, seed=seed)
+        base.append(m0.e2e.p99)
+        sched, _, m1 = run_experiment(
+            "sjf", bias=True, seed=seed,
+            sim_config=SimConfig(seed=seed, fail_times=(30.0, 400.0),
+                                 repair_time=45.0))
+        fail.append(m1.e2e.p99)
+        retries.append(m1.n_failed_dispatches)
+        lost.append(3000 - m1.n_completed)
+    out["failure"] = {
+        "p99_clean": mean(base), "p99_with_failures": mean(fail),
+        "p99_penalty_pct": 100 * (mean(fail) / mean(base) - 1),
+        "requests_retried": mean(retries), "requests_lost": mean(lost),
+    }
+    # 2) straggler mitigation
+    slow, mit = [], []
+    for seed in SEEDS:
+        _, _, a = run_experiment(
+            "fifo", bias=True, seed=seed,
+            sim_config=SimConfig(seed=seed, n_workers=4,
+                                 straggler_worker=3, straggler_after=10.0,
+                                 straggler_factor=6.0))
+        _, _, b = run_experiment(
+            "fifo", bias=True, seed=seed,
+            sim_config=SimConfig(seed=seed, n_workers=4,
+                                 straggler_worker=3, straggler_after=10.0,
+                                 straggler_factor=6.0,
+                                 mitigate_stragglers=True))
+        slow.append(a.e2e.p99)
+        mit.append(b.e2e.p99)
+    out["straggler"] = {
+        "p99_unmitigated": mean(slow), "p99_mitigated": mean(mit),
+        "improvement_pct": 100 * (1 - mean(mit) / mean(slow)),
+    }
+    # 2b) hedged dispatch (speculative batch re-execution)
+    hedge_p99, hedges, wins = [], [], []
+    for seed in SEEDS:
+        _, sim, h = run_experiment(
+            "fifo", bias=True, seed=seed,
+            sim_config=SimConfig(seed=seed, n_workers=4,
+                                 straggler_worker=3, straggler_after=10.0,
+                                 straggler_factor=6.0,
+                                 hedge=True, hedge_factor=2.0))
+        hedge_p99.append(h.e2e.p99)
+        hedges.append(sim.n_hedges)
+        wins.append(sim.n_hedge_wins)
+    out["hedging"] = {
+        "p99_hedged": mean(hedge_p99),
+        "improvement_vs_unmitigated_pct":
+            100 * (1 - mean(hedge_p99) / mean(slow)),
+        "hedges_issued": mean(hedges), "hedge_wins": mean(wins),
+    }
+    # 3) elastic scaling: throughput vs workers
+    scale = {}
+    for n in (1, 2, 4, 8):
+        _, _, m = run_experiment(
+            "fifo", bias=True, seed=1,
+            sim_config=SimConfig(seed=1, n_workers=n))
+        scale[n] = {"throughput_rps": m.throughput_rps,
+                    "makespan_s": m.makespan}
+    out["scaling"] = scale
+    save_json("fault_tolerance", out)
+    return out
+
+
+def report(out: dict) -> str:
+    f, s = out["failure"], out["straggler"]
+    rows = [
+        ["failure: P99 clean -> with 2 failures",
+         f"{f['p99_clean']:.0f}s -> {f['p99_with_failures']:.0f}s "
+         f"(+{f['p99_penalty_pct']:.1f}%)"],
+        ["failure: retried / lost",
+         f"{f['requests_retried']:.0f} / {f['requests_lost']:.0f}"],
+        ["straggler: P99 unmitigated -> mitigated",
+         f"{s['p99_unmitigated']:.0f}s -> {s['p99_mitigated']:.0f}s "
+         f"(-{s['improvement_pct']:.1f}%)"],
+        ["hedging: P99 with speculative re-execution",
+         f"{out['hedging']['p99_hedged']:.0f}s "
+         f"(-{out['hedging']['improvement_vs_unmitigated_pct']:.1f}%, "
+         f"{out['hedging']['hedges_issued']:.0f} hedges, "
+         f"{out['hedging']['hedge_wins']:.0f} wins)"],
+    ]
+    for n, v in out["scaling"].items():
+        rows.append([f"scaling: {n} worker(s)",
+                     f"{v['throughput_rps']:.2f} rps, "
+                     f"makespan {v['makespan_s']:.0f}s"])
+    return fmt_table(["scenario", "result"], rows,
+                     "Beyond-paper: fault tolerance / stragglers / scaling")

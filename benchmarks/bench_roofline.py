@@ -1,0 +1,80 @@
+"""Roofline summary: reads the dry-run + probe artifacts under
+results/ and prints the full per-(arch x shape) roofline table
+(deliverable g). The numbers are produced by
+``repro.launch.dryrun`` / ``repro.launch.roofline``; this bench
+aggregates and sanity-checks them."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import fmt_table, save_json
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _load(pattern):
+    out = {}
+    for path in sorted(glob.glob(os.path.join(ROOT, pattern))):
+        with open(path) as f:
+            rec = json.load(f)
+        out[(rec["arch"], rec["shape"], rec.get("mesh", "16x16"),
+             rec.get("variant", ""))] = rec
+    return out
+
+
+def run() -> dict:
+    dry = _load("dryrun/*.json")
+    roof = _load("roofline/*.json")
+    cells = []
+    for (arch, shape, mesh, variant), rec in sorted(roof.items()):
+        if variant or rec.get("status") != "ok":
+            continue
+        r = rec["roofline"]
+        dr = dry.get((arch, shape, "16x16", ""), {})
+        cells.append({
+            "arch": arch, "shape": shape,
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "bottleneck": r["bottleneck"],
+            "step_lb_s": r["step_time_lower_bound_s"],
+            "roofline_fraction": r["roofline_fraction"],
+            "useful_flops_ratio": r["useful_flops_ratio"],
+            "compile_ok_single": dr.get("status") == "ok",
+            "compile_ok_multi": dry.get(
+                (arch, shape, "2x16x16", ""), {}).get("status") == "ok",
+        })
+    summary = {
+        "n_cells": len(cells),
+        "n_compile_ok_both_meshes": sum(
+            1 for c in cells if c["compile_ok_single"]
+            and c["compile_ok_multi"]),
+        "bottleneck_histogram": {},
+        "cells": cells,
+    }
+    for c in cells:
+        b = c["bottleneck"]
+        summary["bottleneck_histogram"][b] = \
+            summary["bottleneck_histogram"].get(b, 0) + 1
+    save_json("roofline_summary", summary)
+    return summary
+
+
+def report(out: dict) -> str:
+    rows = []
+    for c in out["cells"]:
+        rows.append([c["arch"], c["shape"],
+                     f"{c['compute_s']:.4f}", f"{c['memory_s']:.4f}",
+                     f"{c['collective_s']:.4f}", c["bottleneck"],
+                     f"{c['roofline_fraction']:.2f}",
+                     f"{c['useful_flops_ratio']:.2f}"])
+    tbl = fmt_table(
+        ["arch", "shape", "compute(s)", "memory(s)", "coll(s)",
+         "bound", "frac", "useful"],
+        rows, "Roofline terms per cell (16x16 mesh, per-device)")
+    tbl += (f"\ncells: {out['n_cells']}, compile-ok on both meshes: "
+            f"{out['n_compile_ok_both_meshes']}, bottlenecks: "
+            f"{out['bottleneck_histogram']}")
+    return tbl

@@ -1,0 +1,38 @@
+"""Paper Fig 4 / Table I: semantic workload category -> runtime
+scheduling class mapping. Validates that report splits medium/long and
+that the mapping is policy-independent."""
+
+from __future__ import annotations
+
+from collections import Counter
+
+from .common import POLICIES, fmt_table, run_experiment, save_json
+
+
+def run() -> dict:
+    out = {}
+    for policy in POLICIES:
+        sched, _, _ = run_experiment(policy, bias=True, seed=1)
+        dist = Counter()
+        for rec in sched.admission.log:
+            dist[(rec.category, rec.job_class)] += 1
+        out[policy] = {
+            cat: {jc: dist.get((cat, jc), 0)
+                  for jc in ("short", "medium", "long")}
+            for cat in ("short_qa", "summary", "technical", "report")
+        }
+    save_json("semantic_runtime", out)
+    return out
+
+
+def report(out: dict) -> str:
+    rows = []
+    for cat in ("short_qa", "summary", "technical", "report"):
+        for policy in ("fifo", "sjf"):
+            d = out[policy][cat]
+            rows.append([cat, policy, d["short"], d["medium"], d["long"]])
+    tbl = fmt_table(["semantic", "policy", "short", "medium", "long"],
+                    rows, "Fig 4: semantic -> runtime class (counts)")
+    tbl += ("\npaper: short_qa->short; summary->medium; technical->"
+            "medium/long; report->medium/long; ~policy-independent")
+    return tbl

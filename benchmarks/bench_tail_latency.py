@@ -1,0 +1,95 @@
+"""Paper Table III (P95/P99 +- sigma) and Table IV (wait + percentiles),
+3-run averages across all five schedulers."""
+
+from __future__ import annotations
+
+from .common import POLICIES, SEEDS, fmt_table, mean, run_experiment, \
+    save_json, std
+
+PAPER_T3 = {  # scheduler -> (P95, s95, P99, s99)
+    "fifo": (592.957, 6.686, 630.205, 1.502),
+    "priority": (599.760, 1.738, 633.684, 1.792),
+    "weighted": (595.601, 2.465, 631.305, 2.715),
+    "sjf": (491.480, 3.995, 526.363, 5.028),
+    "aging": (611.968, 2.472, 644.645, 4.905),
+}
+PAPER_T4 = {  # scheduler -> (wait, P50, P95, P99)
+    "fifo": (238.8, 184.7, 593.0, 630.2),
+    "priority": (239.2, 197.8, 599.8, 633.7),
+    "weighted": (241.0, 192.8, 595.6, 631.3),
+    "aging": (245.0, 196.3, 612.0, 644.6),
+    "sjf": (149.5, 106.9, 491.5, 526.4),
+}
+
+
+def run() -> dict:
+    out = {}
+    for policy in POLICIES:
+        p50s, p95s, p99s, waits = [], [], [], []
+        for seed in SEEDS:
+            _, _, m = run_experiment(policy, bias=True, seed=seed)
+            p50s.append(m.e2e.p50)
+            p95s.append(m.e2e.p95)
+            p99s.append(m.e2e.p99)
+            waits.append(m.queue_wait.mean)
+        out[policy] = {
+            "wait_mean": mean(waits),
+            "p50": mean(p50s), "p95": mean(p95s), "p99": mean(p99s),
+            "p95_std": std(p95s), "p99_std": std(p99s),
+        }
+    # alternative max-driven regime (see cost_model.L4_MAX_DRIVEN): the
+    # execution-model end that reproduces the paper's SJF P99 reduction
+    from repro.serving.cost_model import L4_MAX_DRIVEN
+    alt = {}
+    for policy in ("fifo", "sjf"):
+        p99s, p50s = [], []
+        for seed in SEEDS:
+            _, _, m = run_experiment(policy, bias=True, seed=seed,
+                                     cost_model=L4_MAX_DRIVEN)
+            p99s.append(m.e2e.p99)
+            p50s.append(m.e2e.p50)
+        alt[policy] = {"p50": mean(p50s), "p99": mean(p99s)}
+    out["max_driven_regime"] = {
+        **alt,
+        "sjf_p99_reduction_pct":
+            100 * (1 - alt["sjf"]["p99"] / alt["fifo"]["p99"]),
+    }
+
+    fifo, sjf = out["fifo"], out["sjf"]
+    out["sjf_vs_fifo"] = {
+        "p50_reduction_pct": 100 * (1 - sjf["p50"] / fifo["p50"]),
+        "p95_reduction_pct": 100 * (1 - sjf["p95"] / fifo["p95"]),
+        "p99_reduction_pct": 100 * (1 - sjf["p99"] / fifo["p99"]),
+        "wait_reduction_pct": 100 * (1 - sjf["wait_mean"] / fifo["wait_mean"]),
+        "paper": {"p50": 42.0, "p95": 17.0, "p99": 16.0},
+    }
+    save_json("tail_latency", out)
+    return out
+
+
+def report(out: dict) -> str:
+    rows = []
+    for p in POLICIES:
+        r = out[p]
+        pp = PAPER_T4[p]
+        rows.append([p, f"{r['wait_mean']:.1f}", f"{r['p50']:.1f}",
+                     f"{r['p95']:.1f}+-{r['p95_std']:.1f}",
+                     f"{r['p99']:.1f}+-{r['p99_std']:.1f}",
+                     f"{pp[0]:.0f}/{pp[1]:.0f}/{pp[2]:.0f}/{pp[3]:.0f}"])
+    s = out["sjf_vs_fifo"]
+    tbl = fmt_table(
+        ["scheduler", "wait(s)", "P50", "P95", "P99",
+         "paper(w/50/95/99)"], rows,
+        "Tables III-IV: tail latency across schedulers (3-run avg)")
+    tbl += ("\nSJF vs FIFO: P50 -{p50_reduction_pct:.0f}% (paper -42%), "
+            "P95 -{p95_reduction_pct:.0f}% (paper -17%), "
+            "P99 -{p99_reduction_pct:.0f}% (paper -16%), "
+            "wait -{wait_reduction_pct:.0f}%"
+            .format(**s))
+    md = out["max_driven_regime"]
+    tbl += ("\nmax-driven regime: FIFO P99 {f:.0f}s, SJF P99 {j:.0f}s -> "
+            "SJF P99 -{r:.0f}% (paper -16%; P50 overshoots, see "
+            "EXPERIMENTS.md residual note)").format(
+                f=md["fifo"]["p99"], j=md["sjf"]["p99"],
+                r=md["sjf_p99_reduction_pct"])
+    return tbl

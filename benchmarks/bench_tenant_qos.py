@@ -1,0 +1,60 @@
+"""Paper Table V: per-tenant end-to-end latency + queue wait across
+schedulers — the fairness / QoS-differentiation trade-off matrix."""
+
+from __future__ import annotations
+
+from .common import POLICIES, SEEDS, fmt_table, mean, run_experiment, \
+    save_json
+
+PAPER = {  # (scheduler, tenant) -> (latency, wait)
+    ("fifo", "premium"): (248.23, 238.04),
+    ("fifo", "standard"): (249.25, 238.93),
+    ("fifo", "batch"): (252.97, 242.77),
+    ("priority", "premium"): (77.32, 67.18),
+    ("priority", "standard"): (252.80, 242.63),
+    ("priority", "batch"): (426.72, 416.57),
+    ("weighted", "premium"): (158.45, 148.25),
+    ("weighted", "standard"): (255.02, 244.82),
+    ("weighted", "batch"): (333.05, 322.90),
+    ("sjf", "premium"): (226.60, 218.10),
+    ("sjf", "standard"): (157.52, 149.38),
+    ("sjf", "batch"): (94.91, 87.07),
+    ("aging", "premium"): (76.39, 66.26),
+    ("aging", "standard"): (256.07, 245.99),
+    ("aging", "batch"): (433.00, 422.87),
+}
+
+
+def run() -> dict:
+    out = {}
+    for policy in POLICIES:
+        acc = {t: {"lat": [], "wait": []} for t in
+               ("premium", "standard", "batch")}
+        fair = []
+        for seed in SEEDS:
+            _, _, m = run_experiment(policy, bias=True, seed=seed)
+            for t in acc:
+                acc[t]["lat"].append(m.per_tenant[t]["latency"]["mean"])
+                acc[t]["wait"].append(m.per_tenant[t]["queue_wait"]["mean"])
+            fair.append(m.fairness)
+        out[policy] = {
+            t: {"latency": mean(v["lat"]), "queue_wait": mean(v["wait"])}
+            for t, v in acc.items()
+        }
+        out[policy]["jain_fairness"] = mean(fair)
+    save_json("tenant_qos", out)
+    return out
+
+
+def report(out: dict) -> str:
+    rows = []
+    for p in POLICIES:
+        for t in ("premium", "standard", "batch"):
+            r = out[p][t]
+            pl, pw = PAPER[(p, t)]
+            rows.append([p, t, f"{r['latency']:.1f}", f"{r['queue_wait']:.1f}",
+                         f"{pl:.0f} / {pw:.0f}"])
+        rows.append([p, "jain-idx", f"{out[p]['jain_fairness']:.3f}", "", ""])
+    return fmt_table(
+        ["scheduler", "tenant", "latency(s)", "wait(s)", "paper(lat/wait)"],
+        rows, "Table V: tenant-level QoS (3-run avg)")

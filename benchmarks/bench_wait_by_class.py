@@ -1,0 +1,41 @@
+"""Paper Table VI: average queue waiting time by runtime workload class
+(short / medium / long) across schedulers."""
+
+from __future__ import annotations
+
+from .common import POLICIES, SEEDS, fmt_table, mean, run_experiment, \
+    save_json
+
+PAPER = {
+    "fifo": (166.89, 258.21, 258.04),
+    "priority": (168.64, 276.74, 81.20),
+    "weighted": (168.05, 265.49, 164.95),
+    "sjf": (2.87, 163.18, 396.59),
+    "aging": (168.65, 282.63, 83.83),
+}
+
+
+def run() -> dict:
+    out = {}
+    for policy in POLICIES:
+        acc = {c: [] for c in ("short", "medium", "long")}
+        for seed in SEEDS:
+            _, _, m = run_experiment(policy, bias=True, seed=seed)
+            for c in acc:
+                acc[c].append(m.per_class_wait[c])
+        out[policy] = {c: mean(v) for c, v in acc.items()}
+    save_json("wait_by_class", out)
+    return out
+
+
+def report(out: dict) -> str:
+    rows = []
+    for p in POLICIES:
+        r = out[p]
+        pp = PAPER[p]
+        rows.append([p, f"{r['short']:.1f}", f"{r['medium']:.1f}",
+                     f"{r['long']:.1f}",
+                     f"{pp[0]:.0f} / {pp[1]:.0f} / {pp[2]:.0f}"])
+    return fmt_table(["scheduler", "short(s)", "medium(s)", "long(s)",
+                      "paper(s/m/l)"], rows,
+                     "Table VI: queue wait by runtime class (3-run avg)")

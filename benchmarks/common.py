@@ -1,0 +1,85 @@
+"""Shared experiment driver for all paper-table benchmarks.
+
+One *experiment run* = the paper's protocol (Sec. III-B): 3000 requests
+(1000 calibration + 2000 stress bursts), batch capacity 32, batch wait
+0.01 s, one L4-calibrated worker, a given scheduling policy and BIAS
+setting. Three seeds reproduce the paper's 3-run averaging.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.drift import ErrorStats, error_reduction
+from repro.core.estimator import DriftConfig
+from repro.core.scheduler import DriftScheduler
+from repro.serving.cost_model import L4_QWEN_1_8B
+from repro.serving.metrics import RunMetrics
+from repro.serving.simulator import ClusterSimulator, SimConfig
+from repro.workload.generator import GeneratorConfig, WorkloadGenerator
+
+POLICIES = ("fifo", "priority", "weighted", "sjf", "aging")
+SEEDS = (1, 2, 3)                      # paper: three independent runs
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "benchmarks")
+
+_cache: Dict[tuple, tuple] = {}
+
+
+def run_experiment(policy: str, *, bias: bool = True, seed: int = 1,
+                   sim_config: Optional[SimConfig] = None,
+                   total_requests: int = 3000,
+                   cost_model=None,
+                   ) -> Tuple[DriftScheduler, ClusterSimulator, RunMetrics]:
+    """One full paper-protocol run (memoised per process)."""
+    key = (policy, bias, seed, total_requests,
+           id(sim_config) if sim_config is not None else None,
+           getattr(cost_model, "name", None))
+    if key in _cache:
+        return _cache[key]
+    gen = WorkloadGenerator(GeneratorConfig(
+        total_requests=total_requests,
+        calibration_requests=total_requests // 3,
+        seed=seed))
+    plan = gen.plan(seed=seed)
+    sched = DriftScheduler(policy=policy,
+                           config=DriftConfig(bias_enabled=bias))
+    sim = ClusterSimulator(sched, plan, sim_config or SimConfig(seed=seed),
+                           cost_model=cost_model or L4_QWEN_1_8B)
+    metrics = sim.run()
+    _cache[key] = (sched, sim, metrics)
+    return _cache[key]
+
+
+def mean(xs: List[float]) -> float:
+    return sum(xs) / len(xs) if xs else float("nan")
+
+
+def std(xs: List[float]) -> float:
+    if len(xs) < 2:
+        return 0.0
+    m = mean(xs)
+    return (sum((x - m) ** 2 for x in xs) / (len(xs) - 1)) ** 0.5
+
+
+def save_json(name: str, payload: dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def fmt_table(headers: List[str], rows: List[List], title: str = "") -> str:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows))
+              for i, h in enumerate(headers)]
+    out = []
+    if title:
+        out.append(title)
+    out.append("  ".join(str(h).ljust(w) for h, w in zip(headers, widths)))
+    out.append("  ".join("-" * w for w in widths))
+    for r in rows:
+        out.append("  ".join(str(c).ljust(w) for c, w in zip(r, widths)))
+    return "\n".join(out)

@@ -1,0 +1,58 @@
+"""Benchmark harness entry point: one module per paper table/figure
+plus the beyond-paper fault-tolerance suite and the roofline summary.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (bench_bias_convergence, bench_drift_error,
+               bench_fault_tolerance, bench_gpu_exec_latency,
+               bench_queue_dynamics, bench_roofline,
+               bench_semantic_runtime, bench_tail_latency,
+               bench_tenant_qos, bench_wait_by_class)
+
+BENCHES = [
+    ("bias_convergence (Fig 5)", bench_bias_convergence),
+    ("semantic_runtime (Fig 4 / Table I)", bench_semantic_runtime),
+    ("drift_error (Table VII)", bench_drift_error),
+    ("tail_latency (Tables III-IV)", bench_tail_latency),
+    ("tenant_qos (Table V)", bench_tenant_qos),
+    ("wait_by_class (Table VI)", bench_wait_by_class),
+    ("queue_dynamics (Fig 6)", bench_queue_dynamics),
+    ("gpu_exec_latency (Fig 9)", bench_gpu_exec_latency),
+    ("fault_tolerance (beyond-paper)", bench_fault_tolerance),
+    ("roofline (deliverable g)", bench_roofline),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark name")
+    args = ap.parse_args(argv)
+
+    failures = 0
+    for name, mod in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        print(f"\n=== {name} ===", flush=True)
+        try:
+            out = mod.run()
+            print(mod.report(out))
+            print(f"[done in {time.time() - t0:.1f}s]")
+        except Exception as e:  # keep the harness going
+            failures += 1
+            import traceback
+            print(f"[FAILED] {type(e).__name__}: {e}")
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,14 @@
+"""Assigned architecture configs (one module per arch) + input shapes.
+
+``get_config(name)`` returns the full published config;
+``smoke_config(name)`` returns the reduced same-family config used by
+CPU smoke tests; ``ARCHS`` lists all ten assigned architecture ids.
+"""
+
+from .registry import ARCHS, get_config, smoke_config
+from .shapes import SHAPES, Shape, cells_for, input_specs, shape_applicable
+
+__all__ = [
+    "ARCHS", "SHAPES", "Shape", "cells_for", "get_config",
+    "input_specs", "shape_applicable", "smoke_config",
+]

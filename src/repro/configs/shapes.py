@@ -1,0 +1,105 @@
+"""Assigned input shapes and per-cell input specs (ShapeDtypeStructs).
+
+Four shapes per LM architecture:
+
+    train_4k     seq 4,096   global_batch 256   -> train_step
+    prefill_32k  seq 32,768  global_batch 32    -> prefill_step
+    decode_32k   seq 32,768  global_batch 128   -> serve_step (1 token,
+                                                   KV cache of seq_len)
+    long_500k    seq 524,288 global_batch 1     -> serve_step
+
+``long_500k`` requires a sub-quadratic decode state and is skipped for
+pure full-attention architectures (DESIGN.md §Arch-applicability);
+``shape_applicable`` encodes that rule. ``input_specs`` returns
+weak-type-correct ShapeDtypeStruct stand-ins for every model input —
+no device allocation, the same pattern the dry-run lowers.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k": Shape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: Shape) -> Tuple[bool, str]:
+    """(runnable, reason). long_500k needs sub-quadratic decode state."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("pure full-attention arch: O(L) KV cache at 500k "
+                       "context is infeasible; skipped per assignment")
+    return True, ""
+
+
+def cells_for(cfg: ModelConfig) -> List[Shape]:
+    return [s for s in SHAPES.values() if shape_applicable(cfg, s)[0]]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _modality_specs(cfg: ModelConfig, batch: int) -> Dict:
+    """Stub frontend inputs: precomputed frame/patch embeddings."""
+    out = {}
+    if cfg.family == "vlm":
+        out["patches"] = _sds((batch, cfg.prefix_len, cfg.d_model),
+                              jnp.dtype(cfg.dtype))
+    elif cfg.family == "encdec":
+        out["frames"] = _sds((batch, cfg.enc_seq, cfg.d_model),
+                             jnp.dtype(cfg.dtype))
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: Shape, *,
+                cache_fn=None) -> Dict:
+    """ShapeDtypeStruct stand-ins for one (arch x shape) cell.
+
+    train:   {tokens, labels, modality...}
+    prefill: {tokens, modality...}
+    decode:  {tokens [B], pos scalar, cache pytree, rng}
+             (cache shapes come from the family's init_cache via
+             jax.eval_shape — pass ``cache_fn`` to override)
+    """
+    B, L = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs = {
+            "tokens": _sds((B, L), jnp.int32),
+            "labels": _sds((B, L), jnp.int32),
+        }
+        specs.update(_modality_specs(cfg, B))
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": _sds((B, L), jnp.int32)}
+        specs.update(_modality_specs(cfg, B))
+        return specs
+    # decode: one new token against a cache of seq_len
+    if cache_fn is None:
+        from ..models.registry import get_api
+        cache_fn = get_api(cfg).init_cache
+    cache = jax.eval_shape(lambda: cache_fn(cfg, B, L))
+    return {
+        "tokens": _sds((B,), jnp.int32),
+        "pos": _sds((), jnp.int32),
+        "cache": cache,
+        "rng": _sds((2,), jnp.uint32),
+    }

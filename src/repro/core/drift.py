@@ -1,0 +1,119 @@
+"""Runtime token-drift measurement (Sec. II-J, Table VII).
+
+Tracks (estimated_output, observed_output) pairs for every completed
+request and computes the estimation-error metrics the paper reports:
+
+* MAE  = mean |est - obs|
+* RMSE = sqrt(mean (est - obs)^2)
+
+Errors are tracked overall and per semantic category, and as a running
+time-series so Fig. 8 (estimated vs observed under BIAS=OFF/ON) can be
+re-created. The BIAS=OFF vs BIAS=ON *reduction* percentages of Table VII
+are computed by :func:`error_reduction` over two runs' metrics.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from .request import Category, Request
+
+
+@dataclass
+class DriftSample:
+    """One completed request's estimation record."""
+
+    time: float
+    category: str
+    estimated_output: float
+    observed_output: float
+    t_budget: float
+    prompt_tokens: int
+
+    @property
+    def error(self) -> float:
+        return self.estimated_output - self.observed_output
+
+    @property
+    def abs_error(self) -> float:
+        return abs(self.error)
+
+
+@dataclass
+class ErrorStats:
+    n: int = 0
+    mae: float = 0.0
+    rmse: float = 0.0
+    mean_error: float = 0.0  # signed: >0 means over-estimation
+
+    def as_dict(self) -> dict:
+        return {
+            "n": self.n, "mae": self.mae, "rmse": self.rmse,
+            "mean_error": self.mean_error,
+        }
+
+
+class DriftTracker:
+    """Accumulates drift samples during an experiment run."""
+
+    def __init__(self) -> None:
+        self.samples: List[DriftSample] = []
+
+    def record(self, req: Request, now: float) -> DriftSample:
+        if req.estimate is None or req.observed_output_tokens is None:
+            raise ValueError(f"request {req.req_id} incomplete for drift record")
+        s = DriftSample(
+            time=now,
+            category=req.category.value,
+            estimated_output=req.estimate.est_output_tokens,
+            observed_output=float(req.observed_output_tokens),
+            t_budget=req.estimate.t_budget,
+            prompt_tokens=req.prompt_tokens,
+        )
+        self.samples.append(s)
+        return s
+
+    # ------------------------------------------------------------------
+    def stats(self, category: Optional[Category] = None,
+              after: float = -math.inf, before: float = math.inf) -> ErrorStats:
+        cat = category.value if category is not None else None
+        sel = [s for s in self.samples
+               if (cat is None or s.category == cat) and after <= s.time < before]
+        if not sel:
+            return ErrorStats()
+        n = len(sel)
+        mae = sum(s.abs_error for s in sel) / n
+        rmse = math.sqrt(sum(s.error ** 2 for s in sel) / n)
+        mean_err = sum(s.error for s in sel) / n
+        return ErrorStats(n=n, mae=mae, rmse=rmse, mean_error=mean_err)
+
+    def per_category(self) -> Dict[str, ErrorStats]:
+        return {c.value: self.stats(c) for c in Category}
+
+    def misclassification_rate(self, classify_fn) -> float:
+        """Fraction of requests whose *runtime* class (from the observed
+        budget: prompt + observed output) differs from the admission-time
+        class (Fig. 2's misclassification phenomenon)."""
+        if not self.samples:
+            return 0.0
+        wrong = 0
+        for s in self.samples:
+            predicted = classify_fn(s.t_budget)
+            actual = classify_fn(s.prompt_tokens + s.observed_output)
+            if predicted != actual:
+                wrong += 1
+        return wrong / len(self.samples)
+
+
+def error_reduction(off: ErrorStats, on: ErrorStats) -> Dict[str, float]:
+    """Table VII: percentage reduction BIAS=OFF -> BIAS=ON."""
+
+    def pct(a: float, b: float) -> float:
+        return 100.0 * (a - b) / a if a > 0 else 0.0
+
+    return {
+        "mae_reduction_pct": pct(off.mae, on.mae),
+        "rmse_reduction_pct": pct(off.rmse, on.rmse),
+    }

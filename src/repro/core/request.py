@@ -1,0 +1,150 @@
+"""Request model and lifecycle for DriftSched.
+
+A :class:`Request` carries everything the paper's pipeline needs:
+
+* identity + tenant tier + semantic workload category (Sec. II-B/II-D),
+* the admission-time estimate fields filled in by the adaptive token
+  estimator (Eq. 1-2) and the runtime classifier (Eq. 3-4),
+* lifecycle timestamps used by the metrics pipeline (Sec. II-I) to
+  separate queueing latency from GPU execution latency,
+* the observed output length fed back into the drift compensator
+  (Eq. 5-6).
+"""
+
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+class TenantTier(enum.IntEnum):
+    """Service tiers (Sec. II-B). Lower value = higher priority."""
+
+    PREMIUM = 0
+    STANDARD = 1
+    BATCH = 2
+
+    @property
+    def label(self) -> str:
+        return self.name.lower()
+
+
+class Category(enum.Enum):
+    """Semantic workload categories (Sec. II-D)."""
+
+    SHORT_QA = "short_qa"
+    SUMMARY = "summary"
+    TECHNICAL = "technical"
+    REPORT = "report"
+
+
+class JobClass(enum.Enum):
+    """Runtime scheduling classes (Eq. 3-4)."""
+
+    SHORT = "short"
+    MEDIUM = "medium"
+    LONG = "long"
+
+
+class RequestState(enum.Enum):
+    CREATED = "created"
+    QUEUED = "queued"
+    DISPATCHED = "dispatched"
+    EXECUTING = "executing"
+    COMPLETED = "completed"
+    FAILED = "failed"       # worker failure; will be re-queued
+    CANCELLED = "cancelled"
+
+
+_REQ_IDS = itertools.count()
+
+
+@dataclass
+class Estimate:
+    """Admission-time estimate produced by the adaptive token estimator."""
+
+    t_base: float            # baseline workload token estimate (per category)
+    bias: float              # B_runtime used for this estimate
+    safety: float            # S_tenant
+    f_input: float           # prompt-complexity scaling
+    est_output_tokens: float  # T_base * B * S * F        (Eq. 2)
+    t_budget: float           # T_input + est_output       (Eq. 1)
+    job_class: JobClass       # runtime scheduling class   (Eq. 4)
+
+
+@dataclass
+class Request:
+    tenant: TenantTier
+    category: Category
+    prompt: str = ""
+    prompt_tokens: int = 0           # T_input
+    max_tokens: int = 1024           # user-configured generation cap
+    # Ground-truth output length. Hidden from the scheduler; consumed by
+    # the simulator / engine which "generates" this many tokens (clipped
+    # by max_tokens). The real JAX engine ignores it and samples to EOS.
+    true_output_tokens: int = 0
+
+    req_id: int = field(default_factory=lambda: next(_REQ_IDS))
+    # --- lifecycle timestamps (simulated or wall-clock seconds) ---
+    arrival_time: float = 0.0        # submitted to the API gateway
+    enqueue_time: float = 0.0        # entered a tenant queue
+    dispatch_time: Optional[float] = None   # selected by the policy
+    exec_start: Optional[float] = None      # worker began the batch
+    exec_end: Optional[float] = None        # worker finished the batch
+    completion_time: Optional[float] = None
+
+    state: RequestState = RequestState.CREATED
+    estimate: Optional[Estimate] = None
+    observed_output_tokens: Optional[int] = None
+    worker_id: Optional[int] = None
+    retries: int = 0                 # re-dispatches after worker failure
+
+    # monotone admission sequence number, assigned by the scheduler; used
+    # for FIFO / tie-breaking so ordering is fully deterministic.
+    seq: int = -1
+
+    # ------------------------------------------------------------------
+    @property
+    def job_class(self) -> Optional[JobClass]:
+        return self.estimate.job_class if self.estimate else None
+
+    @property
+    def t_budget(self) -> float:
+        if self.estimate is None:
+            raise ValueError(f"request {self.req_id} has no estimate yet")
+        return self.estimate.t_budget
+
+    @property
+    def queue_wait(self) -> Optional[float]:
+        if self.dispatch_time is None:
+            return None
+        return self.dispatch_time - self.arrival_time
+
+    @property
+    def e2e_latency(self) -> Optional[float]:
+        if self.completion_time is None:
+            return None
+        return self.completion_time - self.arrival_time
+
+    @property
+    def gpu_latency(self) -> Optional[float]:
+        """Worker-side execution latency (batch granularity, Sec. IV-J)."""
+        if self.exec_end is None or self.exec_start is None:
+            return None
+        return self.exec_end - self.exec_start
+
+    def mark_completed(self, observed_tokens: int, now: float) -> None:
+        self.observed_output_tokens = int(observed_tokens)
+        self.completion_time = now
+        self.state = RequestState.COMPLETED
+
+    def reset_for_retry(self) -> None:
+        """Re-queue after a worker failure (fault tolerance path)."""
+        self.retries += 1
+        self.dispatch_time = None
+        self.exec_start = None
+        self.exec_end = None
+        self.worker_id = None
+        self.state = RequestState.QUEUED

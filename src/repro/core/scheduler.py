@@ -1,0 +1,112 @@
+"""The DriftSched scheduling engine (Fig. 1, Sec. II-F/II-J).
+
+Ties together the admission controller (workload analysis), the tenant
+queue manager, the active scheduling policy, and the runtime-feedback
+loop:
+
+    submit()   -> admission (estimate Eq. 1-2, classify Eq. 3-4, enqueue)
+    dispatch() -> policy.select() pops the next request for the worker
+    complete() -> drift record + EMA bias update (Eq. 5-6)
+    fail()     -> fault-tolerance re-admission (head of tenant queue)
+
+The engine is execution-agnostic: the discrete-event simulator and the
+real JAX continuous-batching engine both drive it through this exact
+interface, so the scheduling state machine under test is identical in
+both. The whole scheduler state (bias store, queues, policy cursor,
+admission sequence) is checkpointable for restart.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from .admission import AdmissionController
+from .drift import DriftSample, DriftTracker
+from .estimator import AdaptiveTokenEstimator, DriftConfig
+from .policies import SchedulingPolicy, make_policy
+from .queues import TenantQueueManager
+from .request import Request, RequestState
+
+
+class DriftScheduler:
+    """QoS-aware scheduler with runtime token-drift compensation."""
+
+    def __init__(self, policy: str | SchedulingPolicy = "fifo",
+                 config: Optional[DriftConfig] = None,
+                 **policy_kwargs) -> None:
+        self.config = config or DriftConfig()
+        self.estimator = AdaptiveTokenEstimator(self.config)
+        self.queues = TenantQueueManager()
+        self.admission = AdmissionController(self.estimator, self.queues)
+        self.policy: SchedulingPolicy = (
+            policy if isinstance(policy, SchedulingPolicy)
+            else make_policy(policy, **policy_kwargs)
+        )
+        self.drift = DriftTracker()
+        self.completed: List[Request] = []
+        self.dispatched = 0
+
+    # --- lifecycle ------------------------------------------------------
+    def submit(self, req: Request, now: float) -> Request:
+        return self.admission.admit(req, now)
+
+    def dispatch(self, now: float) -> Optional[Request]:
+        req = self.policy.select(self.queues, now)
+        if req is None:
+            return None
+        req.dispatch_time = now
+        req.state = RequestState.DISPATCHED
+        self.dispatched += 1
+        return req
+
+    def dispatch_batch(self, now: float, max_n: int) -> List[Request]:
+        """Fill up to ``max_n`` slots (batch formation, Sec. III-B)."""
+        out: List[Request] = []
+        for _ in range(max_n):
+            req = self.dispatch(now)
+            if req is None:
+                break
+            out.append(req)
+        return out
+
+    def complete(self, req: Request, observed_tokens: int, now: float) -> DriftSample:
+        """Runtime feedback (Sec. II-J): record drift, update bias."""
+        req.mark_completed(observed_tokens, now)
+        sample = self.drift.record(req, now)
+        self.estimator.feedback(req.category, float(observed_tokens), now)
+        self.completed.append(req)
+        return sample
+
+    def fail(self, req: Request, now: float) -> Request:
+        """Worker failure: re-queue at the head, estimate preserved, no
+        bias feedback (at-most-once feedback per completed request)."""
+        req.state = RequestState.FAILED
+        return self.admission.readmit(req, now)
+
+    # --- introspection ---------------------------------------------------
+    @property
+    def bias_store(self):
+        return self.estimator.bias_store
+
+    def queue_depth(self) -> int:
+        return self.queues.depth()
+
+    # --- checkpoint/restore ----------------------------------------------
+    def state_dict(self) -> dict:
+        return {
+            "policy": self.policy.name,
+            "policy_state": self.policy.state_dict(),
+            "bias": self.bias_store.state_dict(),
+            "dispatched": self.dispatched,
+            "queued_req_ids": [r.req_id for r in self.queues.all_requests()],
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        if state.get("policy") != self.policy.name:
+            raise ValueError(
+                f"checkpoint policy {state.get('policy')!r} != {self.policy.name!r}"
+            )
+        self.policy.load_state_dict(state.get("policy_state", {}))
+        self.bias_store.load_state_dict(state.get("bias", {}))
+        self.dispatched = int(state.get("dispatched", 0))

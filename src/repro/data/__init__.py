@@ -1,0 +1,5 @@
+"""Data pipeline for the training path."""
+
+from .pipeline import CorpusTextDataset, SyntheticLMDataset, make_dataset
+
+__all__ = ["CorpusTextDataset", "SyntheticLMDataset", "make_dataset"]

@@ -1,0 +1,12 @@
+"""Distribution substrate: divisibility-aware sharding rules, ZeRO-1
+optimizer with optional int8 gradient compression, checkpointing, and
+fault-tolerance machinery (heartbeats, elastic re-mesh, hedging)."""
+
+from .sharding import (
+    constrain,
+    logical_to_spec,
+    param_shardings,
+    batch_spec,
+)
+
+__all__ = ["constrain", "logical_to_spec", "param_shardings", "batch_spec"]

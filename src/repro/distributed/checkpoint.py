@@ -1,0 +1,144 @@
+"""Checkpoint / restart (fault tolerance, DESIGN.md §7).
+
+Snapshot = {model params, optimizer state, scheduler state (bias store,
+queues, policy cursor), metadata}. Layout:
+
+    <dir>/step_<N>/
+        manifest.json        # step, timestamp, tree structure, digests
+        arrays.npz           # flattened pytree leaves (path-keyed)
+        scheduler.json       # DriftScheduler.state_dict()
+
+Writes are crash-safe (tmp dir + atomic rename) and optionally async
+(double-buffered: at most one in-flight writer; the next save waits).
+Restore picks the newest complete manifest, so a crash mid-write falls
+back to the previous snapshot.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        out[path] = np.asarray(leaf)
+    return out
+
+
+def _unflatten_like(template, arrays: Dict[str, np.ndarray]):
+    flat = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for kp, leaf in flat[0]:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        if path not in arrays:
+            raise KeyError(f"checkpoint missing array {path!r}")
+        arr = arrays[path]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"checkpoint shape mismatch at {path}: "
+                f"{arr.shape} vs {leaf.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(flat[1], leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 2, async_write: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._writer: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state: Dict[str, Any],
+             scheduler_state: Optional[dict] = None,
+             metadata: Optional[dict] = None) -> str:
+        """state: pytree dict (e.g. {"params": ..., "opt": ...})."""
+        self.wait()  # double-buffer: at most one in-flight write
+        arrays = _flatten(state)
+        sched = dict(scheduler_state or {})
+        meta = {
+            "step": int(step),
+            "time": time.time(),
+            "n_arrays": len(arrays),
+            **(metadata or {}),
+        }
+
+        def _write():
+            final = os.path.join(self.directory, f"step_{step:08d}")
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+            with open(os.path.join(tmp, "scheduler.json"), "w") as f:
+                json.dump(sched, f)
+            # manifest last: its presence marks the snapshot complete
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(meta, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        if self.async_write:
+            self._writer = threading.Thread(target=_write, daemon=True)
+            self._writer.start()
+        else:
+            _write()
+        return os.path.join(self.directory, f"step_{step:08d}")
+
+    def wait(self) -> None:
+        if self._writer is not None:
+            self._writer.join()
+            self._writer = None
+
+    def _gc(self) -> None:
+        steps = self.list_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def list_steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                manifest = os.path.join(self.directory, name, "manifest.json")
+                if os.path.exists(manifest):
+                    out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: Optional[int] = None
+                ) -> Tuple[int, Any, dict]:
+        """Returns (step, state, scheduler_state). ``template`` is a
+        pytree of arrays or ShapeDtypeStructs with the target structure."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        with np.load(os.path.join(d, "arrays.npz")) as z:
+            arrays = {k: z[k] for k in z.files}
+        state = _unflatten_like(template, arrays)
+        with open(os.path.join(d, "scheduler.json")) as f:
+            sched = json.load(f)
+        return step, state, sched

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the serving hot spots (DESIGN.md §5):
+flash_attention (prefill/train), paged_decode_attention (decode against
+the paged KV pool), ssd_scan (Mamba-2 state-space duality). ops.py is
+the public dispatch layer; ref.py holds the pure-jnp oracles."""
+
+from . import ops, ref
+from .flash_attention import flash_attention
+from .paged_attention import paged_decode_attention
+from .ssd_scan import ssd_scan
+
+__all__ = ["ops", "ref", "flash_attention", "paged_decode_attention", "ssd_scan"]

@@ -1,0 +1,149 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Sources:
+* ``compiled.cost_analysis()``  -> HLO FLOPs + HBM bytes (per device —
+  the compiled module IS the per-device SPMD program);
+* ``compiled.as_text()``        -> collective ops; we sum the result
+  operand sizes of every all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute (also per device).
+
+Roofline terms (seconds), per the hardware constants in mesh.HW:
+
+    compute    = flops_per_dev / peak_flops
+    memory     = bytes_per_dev / hbm_bw
+    collective = coll_bytes_per_dev / ici_bw
+
+(equivalent to the total-work formulation total / (chips * rate) since
+total = per_dev * chips).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, Optional, Tuple
+
+from ..models.config import ModelConfig
+from .mesh import HW
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+    "s4": 1, "u4": 1,  # rounded up
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+# one result shape, e.g. f32[8,128]{1,0} or bf16[2,4096]
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-operand bytes of every collective op (per device).
+
+    Handles sync ops and async ``-start``/``-done`` pairs (the ``-done``
+    line repeats the shape, so only ``-start`` and plain forms count).
+    """
+    out: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        _, _, rhs = line.partition("=")
+        m = re.search(
+            r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+            r"collective-permute)(-start)?\(", rhs)
+        if not m:
+            continue
+        if re.search(r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                     r"collective-permute)-done\(", rhs):
+            continue
+        kind = m.group(1)
+        # result shape(s) sit between '=' and the op name, e.g.
+        #   %all-gather.39 = f32[576,3,4]{2,1,0} all-gather(%x), ...
+        # (-start forms carry an (in, out) tuple -> halve)
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(rhs[:m.start()]):
+            total += _shape_bytes(dt, dims)
+        if m.group(2):
+            total //= 2
+        out[kind] += total
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def count_collective_ops(hlo_text: str) -> Dict[str, int]:
+    out: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for c in _COLLECTIVES:
+        out[c] = len(re.findall(rf"\b{c}(-start)?\(", hlo_text))
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float,
+                   io_bytes_per_dev: float = 0.0) -> Dict[str, float]:
+    """``bytes_per_dev`` is HloCostAnalysis 'bytes accessed' — an UPPER
+    bound on HBM traffic (the CPU backend fuses less than TPU, so many
+    counted operands would stay in VMEM/registers on the target).
+    ``io_bytes_per_dev`` (argument+output buffer sizes) is the matching
+    LOWER bound: every input/output must cross HBM at least once. The
+    reported memory term uses the upper bound (conservative); both are
+    recorded."""
+    compute = flops_per_dev / HW["peak_flops_bf16"]
+    memory = bytes_per_dev / HW["hbm_bw"]
+    memory_io = io_bytes_per_dev / HW["hbm_bw"]
+    collective = coll_bytes_per_dev / HW["ici_bw"]
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom.replace("_s", "")
+    terms["memory_io_lower_s"] = memory_io
+    total = max(compute, memory, collective)
+    terms["step_time_lower_bound_s"] = total
+    terms["roofline_fraction"] = compute / total if total > 0 else 0.0
+    # optimistic fraction if TPU fusion removes all intermediate traffic
+    best = max(compute, memory_io, collective)
+    terms["roofline_fraction_optimistic"] = (compute / best
+                                             if best > 0 else 0.0)
+    return terms
+
+
+def model_flops(cfg: ModelConfig, kind: str, tokens: int) -> float:
+    """6·N·D (train) / 2·N·D (inference) on active params."""
+    n_active = cfg.active_param_count()
+    per_token = 6.0 * n_active if kind == "train" else 2.0 * n_active
+    return per_token * tokens
+
+
+def summarize_cell(cfg: ModelConfig, kind: str, n_tokens: int,
+                   n_chips: int, cost: dict, coll: Dict[str, int],
+                   io_bytes: float = 0.0) -> Dict[str, float]:
+    flops = float(cost.get("flops", 0.0))
+    b_out = float(cost.get("bytes accessed", 0.0))
+    terms = roofline_terms(flops, b_out, float(coll.get("total", 0)),
+                           io_bytes)
+    mf = model_flops(cfg, kind, n_tokens)
+    hlo_total = flops * n_chips
+    terms.update({
+        "hlo_flops_per_dev": flops,
+        "hlo_bytes_per_dev": b_out,
+        "coll_bytes_per_dev": float(coll.get("total", 0)),
+        "model_flops_total": mf,
+        "useful_flops_ratio": (mf / hlo_total) if hlo_total > 0 else 0.0,
+    })
+    return terms

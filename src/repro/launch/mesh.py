@@ -1,0 +1,31 @@
+"""Production mesh construction (a FUNCTION — importing this module never
+touches jax device state).
+
+Single pod: 16 x 16 = 256 chips, axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model) — the pod
+axis carries pure data parallelism across the inter-pod (DCN) links.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests / elastic re-scale use smaller ones)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+# TPU v5e hardware constants used by the roofline analysis.
+HW = {
+    "peak_flops_bf16": 197e12,   # FLOP/s per chip
+    "hbm_bw": 819e9,             # bytes/s per chip
+    "ici_bw": 50e9,              # bytes/s per link (~ per-chip collective bw)
+    "hbm_bytes": 16 * 2**30,     # 16 GiB HBM per v5e chip
+}

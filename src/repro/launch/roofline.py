@@ -1,0 +1,219 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline term extraction via structural depth probes (deliverable g).
+
+XLA's HloCostAnalysis counts a while-loop body once, so the scan-based
+full-depth compile undercounts per-layer work by ~n_layers. Rather than
+unroll the full stack (108 s compile for the *smallest* arch), we
+compile *unrolled reduced-depth* probes and solve the structural cost
+model exactly:
+
+    dense / moe / vlm / ssm:  f(k) = fixed + k * layer
+                              probes k in {1, 2}
+    encdec:                   f(d, e) = fixed + d * dec + e * enc
+                              probes {(1,1), (2,1), (1,2)}
+    hybrid (attn_every=A):    f(k) = fixed + k * mamba + ceil(k/A) * shared
+                              probes k in {1, 2, A+1}
+
+Layer stacks are homogeneous, so the extrapolation to full depth is
+exact up to XLA fusion noise (validated against a full unroll of
+smollm train_4k — see EXPERIMENTS.md §Roofline methodology).
+
+Every extrapolated quantity (FLOPs, HBM bytes, per-type collective
+bytes/ops) is per device on the single-pod 16x16 mesh.
+"""
+
+import argparse
+import json
+import math
+import sys
+import time
+import traceback
+from typing import Dict, List, Tuple
+
+import jax
+
+from ..configs import ARCHS, SHAPES, get_config, shape_applicable
+from .. import xla_scan as nn_layers
+from ..models.config import ModelConfig
+from . import dryrun as dr
+from .analysis import count_collective_ops, parse_collective_bytes, \
+    summarize_cell
+from .mesh import make_production_mesh
+
+# quantities extrapolated through the structural model
+_KEYS = ("flops", "bytes", "transcendentals", "io_bytes",
+         "coll_all-reduce", "coll_all-gather", "coll_reduce-scatter",
+         "coll_all-to-all", "coll_collective-permute", "coll_total",
+         "ops_all-reduce", "ops_all-gather", "ops_reduce-scatter",
+         "ops_all-to-all", "ops_collective-permute")
+
+
+def _measure(cfg: ModelConfig, shape_name: str, mesh, **lower_kw) -> Dict[str, float]:
+    """Compile one unrolled probe and extract raw per-device quantities."""
+    nn_layers.set_scan_unroll(True)
+    try:
+        with mesh:
+            lowered, _ = dr.lower_cell(cfg, shape_name, mesh, **lower_kw)
+            compiled = lowered.compile()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        cb = parse_collective_bytes(hlo)
+        co = count_collective_ops(hlo)
+        io_bytes = 0.0
+        try:
+            ma = compiled.memory_analysis()
+            if ma is not None:
+                io_bytes = float(
+                    getattr(ma, "argument_size_in_bytes", 0)
+                    + getattr(ma, "output_size_in_bytes", 0))
+        except Exception:
+            pass
+    finally:
+        nn_layers.set_scan_unroll(False)
+    out = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "transcendentals": float(cost.get("transcendentals", 0.0)),
+        "io_bytes": io_bytes,
+        "coll_total": float(cb["total"]),
+    }
+    for k, v in cb.items():
+        if k != "total":
+            out[f"coll_{k}"] = float(v)
+    for k, v in co.items():
+        out[f"ops_{k}"] = float(v)
+    return out
+
+
+def _combine(points: List[Tuple[Dict[str, float], Dict[str, float]]],
+             full_counts: Dict[str, float]) -> Dict[str, float]:
+    """Solve  f(probe) = fixed + sum_c counts[c] * unit_c  exactly.
+
+    ``points`` = [(counts, measured)], with len(points) = n_units + 1.
+    ``full_counts`` = structural counts at full depth.
+    """
+    units = sorted({c for counts, _ in points for c in counts})
+    import numpy as np
+    A = np.array([[1.0] + [counts.get(u, 0.0) for u in units]
+                  for counts, _ in points])
+    out = {}
+    for key in _KEYS:
+        b = np.array([m.get(key, 0.0) for _, m in points])
+        try:
+            coef, *_ = np.linalg.lstsq(A, b, rcond=None)
+        except np.linalg.LinAlgError:
+            out[key] = float(b[-1])
+            continue
+        val = coef[0] + sum(coef[1 + i] * full_counts.get(u, 0.0)
+                            for i, u in enumerate(units))
+        out[key] = float(max(val, 0.0))
+    return out
+
+
+def _probe_plan(cfg: ModelConfig):
+    """[(probe_cfg, counts)], full_counts."""
+    if cfg.family == "encdec":
+        pts = [(cfg.replace(n_layers=d, n_enc_layers=e),
+                {"dec": d, "enc": e})
+               for d, e in ((1, 1), (2, 1), (1, 2))]
+        return pts, {"dec": cfg.n_layers, "enc": cfg.n_enc_layers}
+    if cfg.family == "hybrid":
+        A = cfg.attn_every
+
+        def counts(k):
+            return {"mamba": k, "shared": math.ceil(k / A)}
+        ks = (1, 2, A + 1)
+        pts = [(cfg.replace(n_layers=k), counts(k)) for k in ks]
+        return pts, counts(cfg.n_layers)
+    pts = [(cfg.replace(n_layers=k), {"layer": k}) for k in (1, 2)]
+    return pts, {"layer": cfg.n_layers}
+
+
+def run_cell(arch: str, shape_name: str, *, out_dir: str,
+             force: bool = False, variant: str = "",
+             cfg_overrides: Dict = None,
+             **lower_kw) -> Dict:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    cell = f"{arch}__{shape_name}" + (f"__{variant}" if variant else "")
+    path = os.path.join(out_dir, cell + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    record: Dict = {"arch": arch, "shape": shape_name, "mesh": "16x16",
+                    "kind": shape.kind, "variant": variant}
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        record.update({"status": "skipped", "reason": reason})
+        dr._save(path, record)
+        return record
+
+    mesh = make_production_mesh(multi_pod=False)
+    try:
+        t0 = time.time()
+        plan, full_counts = _probe_plan(cfg)
+        points = []
+        for pcfg, counts in plan:
+            points.append((counts, _measure(pcfg, shape_name, mesh,
+                                            **lower_kw)))
+        extrap = _combine(points, full_counts)
+        coll = {k.replace("coll_", ""): v for k, v in extrap.items()
+                if k.startswith("coll_")}
+        summary = summarize_cell(
+            cfg, shape.kind,
+            shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1),
+            mesh.devices.size,
+            {"flops": extrap["flops"], "bytes accessed": extrap["bytes"]},
+            coll, io_bytes=extrap.get("io_bytes", 0.0))
+        record.update({
+            "status": "ok",
+            "n_chips": int(mesh.devices.size),
+            "probe_s": round(time.time() - t0, 1),
+            "probes": [{"counts": c, **m} for c, m in points],
+            "extrapolated": extrap,
+            "roofline": summary,
+        })
+    except Exception as e:
+        record.update({"status": "error",
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]})
+    dr._save(path, record)
+    return record
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--out", default="results/roofline")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = ARCHS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            rec = run_cell(arch, shape, out_dir=args.out, force=args.force)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                r = rec["roofline"]
+                extra = (f" {r['bottleneck']}-bound"
+                         f" t>={r['step_time_lower_bound_s']:.4f}s"
+                         f" frac={r['roofline_fraction']:.2f}")
+            elif status == "error":
+                failures += 1
+                extra = " " + rec["error"][:120]
+            print(f"[{status:7s}] roofline {arch} x {shape}{extra}",
+                  flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,100 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --preset smoke --steps 50 --dataset synthetic
+
+On this CPU container, real training runs the reduced (smoke) preset;
+the full configs are exercised via --compile-only (lower+compile on the
+production mesh — the same path as the dry-run). Checkpoint/restart is
+on by default: interrupt and relaunch with --resume.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCHS, get_config, smoke_config
+from ..data.pipeline import attach_modality_stubs, make_dataset
+from ..distributed.checkpoint import CheckpointManager
+from ..distributed.optimizer import Optimizer, OptimizerConfig
+from ..models.registry import get_api
+from ..models.steps import make_train_step
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="smollm-135m", choices=ARCHS)
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--dataset", default="synthetic",
+                    choices=["synthetic", "corpus"])
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compile-only", action="store_true",
+                    help="lower+compile the production-mesh train step "
+                         "instead of executing (CPU container)")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    if args.compile_only:
+        from .dryrun import run_cell  # sets XLA_FLAGS on import
+        rec = run_cell(args.arch, "train_4k", multi_pod=False,
+                       out_dir="results/dryrun")
+        print(rec["status"], rec.get("roofline", rec.get("error")))
+        return 0 if rec["status"] == "ok" else 1
+
+    cfg = smoke_config(args.arch) if args.preset == "smoke" \
+        else get_config(args.arch)
+    api = get_api(cfg)
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"dataset={args.dataset} steps={args.steps}")
+
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    opt = Optimizer(OptimizerConfig(lr=args.lr, warmup_steps=10,
+                                    decay_steps=max(args.steps, 100)))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    ds = make_dataset(args.dataset, cfg, args.seq, args.batch)
+
+    start = 0
+    ckpt = None
+    if args.checkpoint_dir:
+        ckpt = CheckpointManager(args.checkpoint_dir)
+        if args.resume and ckpt.latest_step() is not None:
+            start, state, _ = ckpt.restore(
+                {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            print(f"resumed from step {start}")
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = attach_modality_stubs(cfg, ds.batch(step), rng)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss={float(m['loss']):.4f} "
+                  f"gnorm={float(m['grad_norm']):.3f} "
+                  f"lr={float(m['lr']):.2e} "
+                  f"({(time.time()-t0)/(step-start+1):.2f}s/step)",
+                  flush=True)
+        if ckpt and (step + 1) % args.checkpoint_every == 0:
+            ckpt.save(step + 1, {"params": params, "opt": opt_state})
+    if ckpt:
+        ckpt.save(args.steps, {"params": params, "opt": opt_state})
+        ckpt.wait()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,236 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + one *shared* attention block.
+
+The shared block (a single parameter set) is applied every
+``cfg.attn_every`` Mamba layers. Its input is ``concat(h, emb0)`` — the
+current hidden state concatenated with the original token embedding —
+so it operates at width 2*d_model (zamba2-1.2b: 4096 = 32 heads x 128),
+and its output is down-projected back to d_model and added residually.
+(Zamba2's per-application LoRA deltas on the shared block are omitted —
+DESIGN.md §2.)
+
+Long-context deployments run the shared attention with a sliding window
+(cfg.sliding_window), giving the hybrid a bounded decode state:
+per-layer SSM states + ring KV caches for the handful of shared-block
+applications.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from ..kernels import ops, ref
+from . import layers as nn
+from . import mamba2
+from .config import ModelConfig
+
+
+def _app_positions(cfg: ModelConfig) -> List[int]:
+    return list(range(0, cfg.n_layers, cfg.attn_every))
+
+
+def _segments(cfg: ModelConfig) -> List[Tuple[int, int]]:
+    """[(start, end)) mamba-layer slices, one per shared-block application."""
+    apps = _app_positions(cfg)
+    bounds = apps + [cfg.n_layers]
+    return [(bounds[i], bounds[i + 1]) for i in range(len(apps))]
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> Dict:
+    k_embed, k_layers, k_shared, k_final, k_head, k_down = jax.random.split(key, 6)
+    w = 2 * cfg.d_model
+    ka, km, k1, k2 = jax.random.split(k_shared, 4)
+    params = {
+        "embed": nn.init_embed(k_embed, cfg),
+        "layers": jax.vmap(functools.partial(mamba2.init_layer, cfg))(
+            jax.random.split(k_layers, cfg.n_layers)),
+        "shared": {
+            "ln1": nn.init_norm(k1, cfg, width=w),
+            "attn": nn.init_attention(ka, cfg, width=w),
+            "ln2": nn.init_norm(k2, cfg, width=w),
+            "mlp": nn.init_mlp(km, cfg, width=w),
+            "down": nn.dense_init(k_down, (w, cfg.d_model), dtype=nn.dt(cfg)),
+        },
+        "final_norm": nn.init_norm(k_final, cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"table": nn.embed_init(
+            k_head, (cfg.vocab, cfg.d_model), nn.dt(cfg))}
+    return params
+
+
+def _shared_apply(cfg: ModelConfig, sp: Dict, h: jax.Array, emb0: jax.Array,
+                  *, attn_impl: str = "auto") -> jax.Array:
+    """Full-sequence shared-block application."""
+    u = jnp.concatenate([h, emb0], axis=-1)
+    v = u + nn.attention_block(
+        cfg, sp["attn"], nn.apply_norm(cfg, sp["ln1"], u),
+        causal=True, window=cfg.sliding_window, attn_impl=attn_impl,
+    )
+    v = v + nn.mlp_block(cfg, sp["mlp"], nn.apply_norm(cfg, sp["ln2"], v))
+    return h + constrain(v @ sp["down"], "batch", None, None)
+
+
+def _slice_layers(params_layers, s: int, e: int):
+    return jax.tree_util.tree_map(lambda a: a[s:e], params_layers)
+
+
+def forward(cfg: ModelConfig, params: Dict, tokens: jax.Array, *,
+            remat: bool = False, attn_impl: str = "auto",
+            ) -> Tuple[jax.Array, jax.Array]:
+    emb0 = nn.embed(cfg, params["embed"], tokens)
+    h = constrain(emb0, "batch", None, None)
+
+    def scan_body(carry, lp):
+        return mamba2.layer_fwd(cfg, lp, carry, attn_impl=attn_impl), None
+
+    body = scan_body
+    if remat:
+        body = jax.checkpoint(
+            scan_body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    for (s, e) in _segments(cfg):
+        h = _shared_apply(cfg, params["shared"], h, emb0, attn_impl=attn_impl)
+        h, _ = nn.scan_layers(body, h, _slice_layers(params["layers"], s, e))
+
+    h = nn.apply_norm(cfg, params["final_norm"], h)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return nn.unembed(cfg, head, h), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# serving paths
+# ---------------------------------------------------------------------------
+
+def _attn_cache_size(cfg: ModelConfig, max_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(max_len, cfg.sliding_window)
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> Dict:
+    dtype = dtype or nn.dt(cfg)
+    n_apps = len(_app_positions(cfg))
+    S = _attn_cache_size(cfg, max_len)
+    L, H, P, N = cfg.n_layers, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, cfg.conv_dim), dtype),
+        "ssm": jnp.zeros((L, batch, H, P, N), jnp.float32),
+        "attn_k": jnp.zeros((n_apps, batch, S, cfg.n_kv_heads, cfg.d_head), dtype),
+        "attn_v": jnp.zeros((n_apps, batch, S, cfg.n_kv_heads, cfg.d_head), dtype),
+        "lens": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(cfg: ModelConfig, params: Dict, tokens: jax.Array, *,
+            max_len: Optional[int] = None, attn_impl: str = "auto",
+            ) -> Tuple[jax.Array, Dict]:
+    B, L = tokens.shape
+    S = _attn_cache_size(cfg, max_len or L)
+    emb0 = nn.embed(cfg, params["embed"], tokens)
+    h = emb0
+    sp = params["shared"]
+
+    attn_ks, attn_vs, conv_list, ssm_list = [], [], [], []
+
+    def seg_scan(carry, lp):
+        h2, states = mamba2._layer_prefill(cfg, lp, carry)
+        return h2, states
+
+    for (s, e) in _segments(cfg):
+        # shared block with KV capture
+        u = jnp.concatenate([h, emb0], axis=-1)
+        attn_in = nn.apply_norm(cfg, sp["ln1"], u)
+        q, k, v = nn.qkv_project(sp["attn"], attn_in)
+        if cfg.pos == "rope":
+            pos = jnp.arange(L)[None]
+            q = nn.apply_rope(q, jnp.broadcast_to(pos, (B, L)), cfg.rope_theta)
+            k = nn.apply_rope(k, jnp.broadcast_to(pos, (B, L)), cfg.rope_theta)
+        attn = ops.attention(q, k, v, causal=True, window=cfg.sliding_window,
+                             logit_softcap=cfg.logit_softcap, impl=attn_impl)
+        attn = jnp.einsum("blhk,hkd->bld", attn, sp["attn"]["wo"])
+        vv = u + attn
+        vv = vv + nn.mlp_block(cfg, sp["mlp"], nn.apply_norm(cfg, sp["ln2"], vv))
+        h = h + vv @ sp["down"]
+
+        k_keep = k[:, -S:].astype(nn.dt(cfg))
+        v_keep = v[:, -S:].astype(nn.dt(cfg))
+        if cfg.sliding_window is not None and L > S:
+            shift = L % S
+            k_keep = jnp.roll(k_keep, shift, axis=1)
+            v_keep = jnp.roll(v_keep, shift, axis=1)
+        if L < S:
+            pad = S - L
+            k_keep = jnp.pad(k_keep, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v_keep = jnp.pad(v_keep, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        attn_ks.append(k_keep)
+        attn_vs.append(v_keep)
+
+        h, (conv_s, ssm_s) = nn.scan_layers(
+            seg_scan, h, _slice_layers(params["layers"], s, e))
+        conv_list.append(conv_s)
+        ssm_list.append(ssm_s)
+
+    hl = nn.apply_norm(cfg, params["final_norm"], h[:, -1])
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = nn.unembed(cfg, head, hl)
+    cache = {
+        "conv": jnp.concatenate(conv_list, axis=0),
+        "ssm": jnp.concatenate(ssm_list, axis=0),
+        "attn_k": jnp.stack(attn_ks, axis=0),
+        "attn_v": jnp.stack(attn_vs, axis=0),
+        "lens": jnp.full((B,), L, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache: Dict,
+                tokens: jax.Array, pos: jax.Array) -> Tuple[jax.Array, Dict]:
+    B = tokens.shape[0]
+    emb0 = nn.embed(cfg, params["embed"], tokens)     # [B, d]
+    h = emb0
+    sp = params["shared"]
+    S = cache["attn_k"].shape[2]
+    attn_lens = jnp.minimum(cache["lens"] + 1, S)
+
+    new_k, new_v = cache["attn_k"], cache["attn_v"]
+    conv_all, ssm_all = cache["conv"], cache["ssm"]
+
+    def seg_scan(carry, xs):
+        lp, conv_st, ssm_st = xs
+        h2, states = mamba2.decode_layer(cfg, lp, carry, conv_st, ssm_st)
+        return h2, states
+
+    for i, (s, e) in enumerate(_segments(cfg)):
+        u = jnp.concatenate([h, emb0], axis=-1)
+        attn_in = nn.apply_norm(cfg, sp["ln1"], u)
+        attn, kc, vc, _ = nn.attention_decode(
+            cfg, sp["attn"], attn_in, new_k[i], new_v[i], pos, attn_lens,
+            window=cfg.sliding_window,
+        )
+        new_k = new_k.at[i].set(kc)
+        new_v = new_v.at[i].set(vc)
+        vv = u + attn
+        vv = vv + nn.mlp_block(cfg, sp["mlp"], nn.apply_norm(cfg, sp["ln2"], vv))
+        h = h + vv @ sp["down"]
+
+        seg_layers = _slice_layers(params["layers"], s, e)
+        h, (conv_s, ssm_s) = nn.scan_layers(
+            seg_scan, h,
+            (seg_layers, conv_all[s:e], ssm_all[s:e]),
+        )
+        conv_all = jax.lax.dynamic_update_slice_in_dim(conv_all, conv_s, s, axis=0)
+        ssm_all = jax.lax.dynamic_update_slice_in_dim(ssm_all, ssm_s, s, axis=0)
+
+    h = nn.apply_norm(cfg, params["final_norm"], h)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = nn.unembed(cfg, head, h)
+    return logits, {
+        "conv": conv_all, "ssm": ssm_all,
+        "attn_k": new_k, "attn_v": new_v,
+        "lens": cache["lens"] + 1,
+    }

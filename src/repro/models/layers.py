@@ -1,0 +1,414 @@
+"""Shared model building blocks (functional JAX, params as dicts).
+
+Conventions:
+* params are nested dicts of jnp arrays; per-layer params are stacked on
+  a leading L axis and consumed via ``jax.lax.scan``;
+* attention weights are stored head-split: wq [d, H, hd], wk/wv
+  [d, Hk, hd], wo [H, hd, d] — so tensor-parallel sharding rules can
+  target the head axis directly;
+* activations flow in ``cfg.dtype`` (bf16); norms/softmax/rope in f32;
+* :func:`repro.distributed.sharding.constrain` annotates the TP-critical
+  intermediates (no-op off-mesh).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from ..kernels import ops
+from .config import ModelConfig
+
+
+def dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# layer-stack scan (analysis tooling may force full unroll — see
+# repro.xla_scan; production lowering keeps rolled loops)
+# ---------------------------------------------------------------------------
+
+from ..xla_scan import scan as scan_layers  # noqa: E402
+from ..xla_scan import set_scan_unroll  # noqa: E402,F401  (re-export)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, fan_in: Optional[int] = None, dtype=jnp.bfloat16):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def init_norm(key, cfg: ModelConfig, width: Optional[int] = None) -> Dict:
+    width = width or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((width,), dt(cfg)),
+                "bias": jnp.zeros((width,), dt(cfg))}
+    return {"scale": jnp.zeros((width,), dt(cfg))}
+
+
+def apply_norm(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+# ---------------------------------------------------------------------------
+# rotary / sinusoidal position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., L, H, D] (or [..., H, D] with scalar-per-row positions
+    broadcast); positions: int array broadcastable to x.shape[:-2]."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                       # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., D/2]
+    cos = jnp.cos(angles)[..., None, :]                # [..., 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, d_model: int,
+                         offset: int = 0) -> jax.Array:
+    pos = jnp.arange(offset, offset + length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10_000.0, dim / d_model)
+    pe = jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+    return pe  # [length, d_model] f32
+
+
+def sinusoidal_at(pos: jax.Array, d_model: int) -> jax.Array:
+    """Sinusoidal row(s) at a traced position. pos scalar or [B]."""
+    posf = jnp.asarray(pos, jnp.float32)[..., None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)
+    angle = posf / jnp.power(10_000.0, dim / d_model)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention (self / cross), full-sequence and cached-decode paths
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, width: Optional[int] = None) -> Dict:
+    width = width or cfg.d_model
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, (width, H, hd), fan_in=width, dtype=dt(cfg)),
+        "wk": dense_init(k2, (width, Hk, hd), fan_in=width, dtype=dt(cfg)),
+        "wv": dense_init(k3, (width, Hk, hd), fan_in=width, dtype=dt(cfg)),
+        "wo": dense_init(k4, (H, hd, width), fan_in=H * hd, dtype=dt(cfg)),
+    }
+
+
+def qkv_project(p: Dict, x: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"])
+    k = jnp.einsum("bld,dhk->blhk", x, p["wk"])
+    v = jnp.einsum("bld,dhk->blhk", x, p["wv"])
+    q = constrain(q, "batch", None, "model", None)
+    k = constrain(k, "batch", None, "model", None)
+    v = constrain(v, "batch", None, "model", None)
+    return q, k, v
+
+
+def attention_block(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jax.Array,                       # [B, L, width]
+    *,
+    positions: Optional[jax.Array] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    prefix_len: int = 0,
+    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,  # cross-attn
+    attn_impl: str = "auto",
+) -> jax.Array:
+    """Full-sequence attention (training / prefill)."""
+    B, L, _ = x.shape
+    q, k, v = (None, None, None)
+    if kv_override is None:
+        q, k, v = qkv_project(p, x)
+        if cfg.pos == "rope":
+            pos = positions if positions is not None else jnp.arange(L)[None]
+            q = apply_rope(q, jnp.broadcast_to(pos, (B, L)), cfg.rope_theta)
+            k = apply_rope(k, jnp.broadcast_to(pos, (B, L)), cfg.rope_theta)
+    else:
+        q = jnp.einsum("bld,dhk->blhk", x, p["wq"])
+        q = constrain(q, "batch", None, "model", None)
+        k, v = kv_override
+        causal = False
+
+    out = ops.attention(q, k, v, causal=causal, window=window,
+                        logit_softcap=cfg.logit_softcap, impl=attn_impl,
+                        prefix_len=prefix_len if causal else 0)
+    out = jnp.einsum("blhk,hkd->bld", out, p["wo"])
+    return constrain(out, "batch", None, None)
+
+
+def cross_kv(cfg: ModelConfig, p: Dict, enc_out: jax.Array):
+    """Precompute cross-attention K/V from encoder output (cached once)."""
+    k = jnp.einsum("bld,dhk->blhk", enc_out, p["wk"])
+    v = jnp.einsum("bld,dhk->blhk", enc_out, p["wv"])
+    return k, v
+
+
+def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int8 per-(.., head) quantisation over the head_dim."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def attention_decode(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jax.Array,                       # [B, width] one token per seq
+    k_cache: jax.Array,                 # [B, S, Hk, hd]
+    v_cache: jax.Array,
+    pos: jax.Array,                     # [] int32: current absolute position
+    cache_len: jax.Array,               # [B] valid entries AFTER this write
+    *,
+    window: Optional[int] = None,
+    cross: bool = False,
+    kv_scales: Optional[Tuple[jax.Array, jax.Array]] = None,  # int8 cache
+) -> Tuple[jax.Array, jax.Array, jax.Array, Optional[Tuple]]:
+    """Cached single-token decode. Writes the new K/V at the ring slot
+    (pos % S for windowed caches, else pos), then attends over the valid
+    cache. ``pos`` may be a scalar (lockstep batch: dry-run serve_step)
+    or per-sequence [B] (continuous batching: slots at different depths).
+    ``kv_scales`` enables the int8-quantised cache path (the new entry
+    is quantised on write; the cache is dequantised for attention — on
+    TPU the paged kernel fuses the dequant in VMEM).
+    Returns (out [B, width], k_cache, v_cache, kv_scales)."""
+    B = x.shape[0]
+    S = k_cache.shape[1]
+    q = jnp.einsum("bd,dhk->bhk", x, p["wq"])
+    if not cross:
+        k_new = jnp.einsum("bd,dhk->bhk", x, p["wk"])
+        v_new = jnp.einsum("bd,dhk->bhk", x, p["wv"])
+        if cfg.pos == "rope":
+            posb = jnp.broadcast_to(pos, (B,))
+            q = apply_rope(q, posb, cfg.rope_theta)
+            k_new = apply_rope(k_new, posb, cfg.rope_theta)
+        if kv_scales is not None:
+            k_new, ks_new = quantize_kv(k_new)
+            v_new, vs_new = quantize_kv(v_new)
+        slot = pos % S                                  # ring when S < max_len
+        if getattr(slot, "ndim", 0) == 0:
+            k_cache = k_cache.at[:, slot].set(k_new.astype(k_cache.dtype))
+            v_cache = v_cache.at[:, slot].set(v_new.astype(v_cache.dtype))
+            if kv_scales is not None:
+                kv_scales = (kv_scales[0].at[:, slot].set(ks_new),
+                             kv_scales[1].at[:, slot].set(vs_new))
+        else:                                           # per-slot positions
+            idx = jnp.arange(B)
+            k_cache = k_cache.at[idx, slot].set(k_new.astype(k_cache.dtype))
+            v_cache = v_cache.at[idx, slot].set(v_new.astype(v_cache.dtype))
+            if kv_scales is not None:
+                kv_scales = (kv_scales[0].at[idx, slot].set(ks_new),
+                             kv_scales[1].at[idx, slot].set(vs_new))
+    else:
+        if cfg.pos == "rope":
+            q = apply_rope(q, jnp.broadcast_to(pos, (B,)), cfg.rope_theta)
+
+    if kv_scales is not None and not cross:
+        k_attn = dequantize_kv(k_cache, kv_scales[0]).astype(q.dtype)
+        v_attn = dequantize_kv(v_cache, kv_scales[1]).astype(q.dtype)
+    else:
+        k_attn, v_attn = k_cache, v_cache
+    out = ops.decode_attention(
+        q, k_attn, v_attn, cache_len,
+        logit_softcap=cfg.logit_softcap,
+        # ring caches are position-complete: every valid slot is within
+        # the window by construction, so no extra window mask is needed.
+        window=None,
+    )
+    out = jnp.einsum("bhk,hkd->bd", out, p["wo"])
+    return out, k_cache, v_cache, kv_scales
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, width: Optional[int] = None) -> Dict:
+    width = width or cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w1": dense_init(k1, (width, cfg.d_ff), dtype=dt(cfg)),
+        "w2": dense_init(k2, (cfg.d_ff, width), dtype=dt(cfg)),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        p["w3"] = dense_init(k3, (width, cfg.d_ff), dtype=dt(cfg))
+    return p
+
+
+def mlp_block(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
+    h = x @ p["w1"]
+    h = constrain(h, "batch", None, "model") if h.ndim == 3 else h
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["w3"])
+    elif cfg.act == "geglu":
+        h = jax.nn.gelu(h) * (x @ p["w3"])
+    else:
+        h = jax.nn.gelu(h)
+    out = h @ p["w2"]
+    return constrain(out, "batch", None, None) if out.ndim == 3 else out
+
+
+# ---------------------------------------------------------------------------
+# Mixture-of-Experts (grouped capacity dispatch, mesh-tf style)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig) -> Dict:
+    E, d, ff = cfg.n_experts, cfg.d_model, cfg.d_ff
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(k1, (d, E), dtype=jnp.float32),
+        "w1": dense_init(k2, (E, d, ff), fan_in=d, dtype=dt(cfg)),
+        "w2": dense_init(k3, (E, ff, d), fan_in=ff, dtype=dt(cfg)),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        p["w3"] = dense_init(k4, (E, d, ff), fan_in=d, dtype=dt(cfg))
+    return p
+
+
+def moe_block(cfg: ModelConfig, p: Dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Top-k routed experts with capacity-bounded grouped dispatch.
+
+    Returns (out, aux_loss). FLOPs are capacity-bounded (= active-expert
+    compute x capacity factor), *not* n_experts-dense — the einsum
+    dispatch keeps sharding predictable: group axis on data, expert axis
+    on model (EP), which lowers to an all-to-all pair on the mesh.
+    """
+    B, L, d = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    T = B * L
+    g_size = min(cfg.moe_group_size, T)
+    # pad tokens to a multiple of the group size
+    n_groups = -(-T // g_size)
+    pad = n_groups * g_size - T
+    xt = x.reshape(T, d)
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    xg = xt.reshape(n_groups, g_size, d)
+    xg = constrain(xg, "batch", None, None)
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)            # [G, T, E]
+
+    # top-k selection
+    top_p, top_e = jax.lax.top_k(probs, K)             # [G, T, K]
+    top_p = top_p / jnp.clip(top_p.sum(-1, keepdims=True), 1e-9)
+
+    capacity = int(math.ceil(g_size * K / E * cfg.moe_capacity_factor))
+    capacity = max(capacity, 4)
+
+    # position of each (token, k) within its expert, via cumsum of one-hots
+    onehot = jax.nn.one_hot(top_e, E, dtype=jnp.float32)      # [G, T, K, E]
+    flat = onehot.reshape(n_groups, g_size * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                      # positions
+    pos = pos.reshape(n_groups, g_size, K, E)
+    in_cap = (pos < capacity)
+    pos_sel = (pos * onehot).sum(-1)                           # [G, T, K]
+    keep = (onehot * in_cap).sum(-1)                           # [G, T, K] 0/1
+
+    # dispatch/combine tensors [G, T, E, C]
+    cap_oh = jax.nn.one_hot(pos_sel, capacity, dtype=jnp.float32)  # [G,T,K,C]
+    disp = jnp.einsum("gtke,gtkc,gtk->gtec", onehot, cap_oh, keep)
+    comb = jnp.einsum("gtke,gtkc,gtk->gtec", onehot, cap_oh, keep * top_p)
+
+    xe = jnp.einsum("gtec,gtd->gecd", disp.astype(dt(cfg)), xg)  # [G,E,C,d]
+    xe = constrain(xe, "batch", "expert", None, None)
+    h = jnp.einsum("gecd,edf->gecf", xe, p["w1"])
+    if cfg.act in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+        h = act(h) * jnp.einsum("gecd,edf->gecf", xe, p["w3"])
+    else:
+        h = jax.nn.gelu(h)
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w2"])
+    ye = constrain(ye, "batch", "expert", None, None)
+    out = jnp.einsum("gtec,gecd->gtd", comb.astype(dt(cfg)), ye)
+
+    out = out.reshape(n_groups * g_size, d)[:T].reshape(B, L, d)
+
+    # Switch-style load-balance aux loss
+    density = onehot.sum(2).mean(axis=1)               # fraction routed [G, E]
+    router_prob = probs.mean(axis=1)                   # [G, E]
+    aux = (density * router_prob).sum(-1).mean() * E
+    return constrain(out, "batch", None, None), aux.astype(jnp.float32)
+
+
+def moe_block_decode(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
+    """Decode-path MoE for [B, d] single tokens: single group, generous
+    capacity (small-batch imbalance)."""
+    out, _ = moe_block(cfg.replace(
+        moe_group_size=x.shape[0], moe_capacity_factor=2.0
+    ), p, x[:, None, :])
+    return out[:, 0, :]
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg: ModelConfig) -> Dict:
+    return {"table": embed_init(key, (cfg.vocab, cfg.d_model), dt(cfg))}
+
+
+def embed(cfg: ModelConfig, p: Dict, tokens: jax.Array) -> jax.Array:
+    x = p["table"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dt(cfg))
+    return x
+
+
+def unembed(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
+    logits = jnp.einsum("...d,vd->...v", x, p["table"])
+    if cfg.logit_softcap is not None:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits

@@ -1,0 +1,290 @@
+"""Mamba-2 (SSD) model — the attention-free family (mamba2-2.7b).
+
+Block: in_proj -> (z | xBC | dt); causal depthwise conv + SiLU on xBC;
+selective SSD scan (kernels/ops.ssd) with per-head A, D skip; gated
+RMSNorm; out_proj. Decode keeps O(1) state per layer: a [k-1, conv_dim]
+conv ring plus the [H, P, N] SSM state — the SSM answer to a KV cache
+(DESIGN.md §4: constant-size decode state is why this family runs
+long_500k).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from ..kernels import ops, ref
+from . import layers as nn
+from .config import ModelConfig
+
+
+def _split_sizes(cfg: ModelConfig):
+    din = cfg.d_inner
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    return din, gn, cfg.ssm_heads
+
+
+def init_layer(cfg: ModelConfig, key: jax.Array) -> Dict:
+    """Input projections are stored SPLIT (w_z | w_x | w_b | w_c | w_dt)
+    rather than as Mamba-2's fused in_proj: slicing a fused projection's
+    output cuts across tensor-parallel shard boundaries and forced an
+    all-gather of the full activation every layer (EXPERIMENTS.md §Perf,
+    mamba2 hillclimb: 453 GB/device/step of resharding all-gathers).
+    Split projections shard cleanly — w_z/w_x column-parallel on the
+    model axis (d_inner % TP == 0, head-aligned), the small B/C/dt
+    projections replicated. Mathematically identical, same param count;
+    the depthwise conv splits per segment the same way."""
+    din, gn, H = _split_sizes(cfg)
+    d = cfg.d_model
+    k1, k2, k3, k4, k5, k6, k7, k8 = jax.random.split(key, 8)
+    # dt bias initialised so softplus(dt_bias) spans ~[1e-3, 1e-1]
+    u = jax.random.uniform(k4, (H,), jnp.float32)
+    dt_init = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+
+    def conv_w(key, width):
+        return (jax.random.normal(key, (cfg.ssm_conv, width), jnp.float32)
+                * (cfg.ssm_conv ** -0.5)).astype(nn.dt(cfg))
+
+    return {
+        "ln": nn.init_norm(k5, cfg),
+        "ssm": {
+            "w_z": nn.dense_init(k1, (d, din), dtype=nn.dt(cfg)),
+            "w_x": nn.dense_init(k6, (d, din), dtype=nn.dt(cfg)),
+            "w_b": nn.dense_init(k7, (d, gn), dtype=nn.dt(cfg)),
+            "w_c": nn.dense_init(k8, (d, gn), dtype=nn.dt(cfg)),
+            "w_dt": nn.dense_init(jax.random.fold_in(k1, 1), (d, H),
+                                  dtype=nn.dt(cfg)),
+            "conv_x_w": conv_w(k2, din),
+            "conv_x_b": jnp.zeros((din,), nn.dt(cfg)),
+            "conv_b_w": conv_w(jax.random.fold_in(k2, 1), gn),
+            "conv_b_b": jnp.zeros((gn,), nn.dt(cfg)),
+            "conv_c_w": conv_w(jax.random.fold_in(k2, 2), gn),
+            "conv_c_b": jnp.zeros((gn,), nn.dt(cfg)),
+            "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+            "D": jnp.ones((H,), jnp.float32),
+            "dt_bias": dt_bias.astype(jnp.float32),
+            "gate_norm": jnp.zeros((din,), nn.dt(cfg)),
+            "out_proj": nn.dense_init(k3, (din, d), dtype=nn.dt(cfg)),
+        },
+    }
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> Dict:
+    k_embed, k_layers, k_final, k_head = jax.random.split(key, 4)
+    params = {
+        "embed": nn.init_embed(k_embed, cfg),
+        "layers": jax.vmap(functools.partial(init_layer, cfg))(
+            jax.random.split(k_layers, cfg.n_layers)),
+        "final_norm": nn.init_norm(k_final, cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"table": nn.embed_init(
+            k_head, (cfg.vocab, cfg.d_model), nn.dt(cfg))}
+    return params
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. x [B, L, C], w [k, C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32),
+        w.astype(jnp.float32)[:, None, :],          # [k, 1, C]
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssm_pre(cfg: ModelConfig, sp: Dict, x: jax.Array):
+    """Split input projections. x [B, L, d] (or [B, d]) ->
+    (z, xs, b_raw, c_raw, dt_raw) — all pre-conv, shard-aligned."""
+    z = x @ sp["w_z"]
+    xs = x @ sp["w_x"]
+    b = x @ sp["w_b"]
+    c = x @ sp["w_c"]
+    dt_raw = x @ sp["w_dt"]
+    if x.ndim == 3:
+        z = constrain(z, "batch", None, "model")
+        xs = constrain(xs, "batch", None, "model")
+    return z, xs, b, c, dt_raw
+
+
+def _ssd_inputs(cfg: ModelConfig, sp: Dict, xs: jax.Array, b: jax.Array,
+                c: jax.Array, dt_raw: jax.Array):
+    """Discretise post-conv segments. Returns (xh, a, b, c, x_heads, dt)."""
+    din, gn, H = _split_sizes(cfg)
+    G, N, P = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_headdim
+    b = b.reshape(*b.shape[:-1], G, N)
+    c = c.reshape(*c.shape[:-1], G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + sp["dt_bias"])
+    a = -jnp.exp(sp["A_log"]) * dt                      # [..., H] log decay
+    x_heads = xs.reshape(*xs.shape[:-1], H, P)
+    if x_heads.ndim == 4:
+        x_heads = constrain(x_heads, "batch", None, "model", None)
+    xh = (x_heads.astype(jnp.float32) * dt[..., None]).astype(xs.dtype)
+    return xh, a.astype(xs.dtype), b, c, x_heads, dt
+
+
+def _gated_out(cfg: ModelConfig, sp: Dict, y_heads: jax.Array, z: jax.Array,
+               x_heads: jax.Array) -> jax.Array:
+    """D skip + gated RMSNorm + out_proj. y/x [.., H, P], z [.., din]."""
+    y = y_heads.astype(jnp.float32) + sp["D"][..., None] * x_heads.astype(jnp.float32)
+    y = y.reshape(*z.shape)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = nn.rms_norm(y.astype(z.dtype), sp["gate_norm"])
+    return y @ sp["out_proj"]
+
+
+def layer_fwd(cfg: ModelConfig, lp: Dict, h: jax.Array, *,
+              attn_impl: str = "auto") -> jax.Array:
+    """One Mamba-2 block, full sequence."""
+    sp = lp["ssm"]
+    x = nn.apply_norm(cfg, lp["ln"], h)
+    z, xs, b, c, dt_raw = _ssm_pre(cfg, sp, x)
+    xs = jax.nn.silu(_causal_conv(xs, sp["conv_x_w"], sp["conv_x_b"]))
+    b = jax.nn.silu(_causal_conv(b, sp["conv_b_w"], sp["conv_b_b"]))
+    c = jax.nn.silu(_causal_conv(c, sp["conv_c_w"], sp["conv_c_b"]))
+    xh, a, b, c, x_heads, _ = _ssd_inputs(cfg, sp, xs, b, c, dt_raw)
+    y = ops.ssd(xh, a, b, c, chunk=cfg.ssm_chunk,
+                impl=attn_impl if attn_impl.startswith("pallas") else "auto")
+    out = _gated_out(cfg, sp, y, z, x_heads)
+    return h + constrain(out, "batch", None, None)
+
+
+def forward(cfg: ModelConfig, params: Dict, tokens: jax.Array, *,
+            remat: bool = False, attn_impl: str = "auto",
+            ) -> Tuple[jax.Array, jax.Array]:
+    x = nn.embed(cfg, params["embed"], tokens)
+    # residual stream replicated on d (batch-sharded only): every layer
+    # then costs exactly one row-parallel all-reduce (out_proj) instead
+    # of a resharding cycle (EXPERIMENTS.md §Perf, mamba2 iteration 2)
+    x = constrain(x, "batch", None, None)
+
+    def scan_body(h, lp):
+        return layer_fwd(cfg, lp, h, attn_impl=attn_impl), None
+
+    if remat:
+        scan_body = jax.checkpoint(
+            scan_body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    x, _ = nn.scan_layers(scan_body, x, params["layers"])
+    x = nn.apply_norm(cfg, params["final_norm"], x)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return nn.unembed(cfg, head, x), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# serving paths — O(1) decode state
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> Dict:
+    del max_len  # constant-size state
+    dtype = dtype or nn.dt(cfg)
+    L, H, P, N = cfg.n_layers, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, cfg.conv_dim), dtype),
+        "ssm": jnp.zeros((L, batch, H, P, N), jnp.float32),
+        "lens": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _layer_prefill(cfg: ModelConfig, lp: Dict, h: jax.Array):
+    """Layer forward that also returns (conv_state, ssm_state). The conv
+    ring stores the pre-conv xs|b|c segments concatenated (one cache
+    tensor, decode re-splits at the fixed segment offsets)."""
+    sp = lp["ssm"]
+    x = nn.apply_norm(cfg, lp["ln"], h)
+    z, xs, b, c, dt_raw = _ssm_pre(cfg, sp, x)
+    tail = slice(-(cfg.ssm_conv - 1), None)
+    conv_state = jnp.concatenate(
+        [xs[:, tail], b[:, tail], c[:, tail]], axis=-1).astype(nn.dt(cfg))
+    xs = jax.nn.silu(_causal_conv(xs, sp["conv_x_w"], sp["conv_x_b"]))
+    b = jax.nn.silu(_causal_conv(b, sp["conv_b_w"], sp["conv_b_b"]))
+    c = jax.nn.silu(_causal_conv(c, sp["conv_c_w"], sp["conv_c_b"]))
+    xh, a, b, c, x_heads, _ = _ssd_inputs(cfg, sp, xs, b, c, dt_raw)
+    y, state = ref.ssd_chunked(
+        xh, a, b, c, chunk=cfg.ssm_chunk, return_final_state=True
+    )
+    out = _gated_out(cfg, sp, y, z, x_heads)
+    return h + out, (conv_state, state)
+
+
+def prefill(cfg: ModelConfig, params: Dict, tokens: jax.Array, *,
+            max_len: Optional[int] = None, attn_impl: str = "auto",
+            ) -> Tuple[jax.Array, Dict]:
+    B, L = tokens.shape
+    # ssd_chunked zero-pads ragged chunks internally (exactly: pad
+    # tokens carry x=0, a=0, so the final state is untouched)
+    x = nn.embed(cfg, params["embed"], tokens)
+
+    def scan_body(h, lp):
+        h2, states = _layer_prefill(cfg, lp, h)
+        return h2, states
+
+    x, (conv_s, ssm_s) = nn.scan_layers(scan_body, x, params["layers"])
+    x = nn.apply_norm(cfg, params["final_norm"], x[:, L - 1])
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = nn.unembed(cfg, head, x)
+    cache = {"conv": conv_s, "ssm": ssm_s,
+             "lens": jnp.full((B,), L, jnp.int32)}
+    return logits, cache
+
+
+def decode_layer(cfg: ModelConfig, lp: Dict, h: jax.Array,
+                 conv_st: jax.Array, ssm_st: jax.Array):
+    """Single-token Mamba block step (shared with the hybrid family).
+    conv_st: [B, k-1, conv_dim] ring of pre-conv xs|b|c segments."""
+    B = h.shape[0]
+    din, gn, H = _split_sizes(cfg)
+    G, N, P = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_headdim
+    sp = lp["ssm"]
+    xn = nn.apply_norm(cfg, lp["ln"], h)
+    z, xs_t, b_t, c_t, dt_raw = _ssm_pre(cfg, sp, xn)
+    seg_t = jnp.concatenate([xs_t, b_t, c_t], axis=-1)   # [B, conv_dim]
+    win = jnp.concatenate([conv_st.astype(jnp.float32),
+                           seg_t[:, None, :].astype(jnp.float32)], axis=1)
+    conv_w = jnp.concatenate([sp["conv_x_w"], sp["conv_b_w"],
+                              sp["conv_c_w"]], axis=-1).astype(jnp.float32)
+    conv_b = jnp.concatenate([sp["conv_x_b"], sp["conv_b_b"],
+                              sp["conv_c_b"]], axis=-1).astype(jnp.float32)
+    conv_out = jnp.einsum("bkc,kc->bc", win, conv_w) + conv_b
+    seg = jax.nn.silu(conv_out).astype(xn.dtype)         # [B, conv_dim]
+    new_conv = win[:, 1:].astype(conv_st.dtype)
+
+    xs_ = seg[..., :din]
+    b = seg[..., din:din + gn].reshape(B, G, N)
+    c = seg[..., din + gn:].reshape(B, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + sp["dt_bias"])
+    a = -jnp.exp(sp["A_log"]) * dt                       # [B, H]
+    x_heads = xs_.reshape(B, H, P)
+    xh = (x_heads.astype(jnp.float32) * dt[..., None]).astype(xs_.dtype)
+    y, new_ssm = ops.ssm_decode_step(ssm_st, xh, a, b, c)
+    out = _gated_out(cfg, sp, y, z, x_heads)
+    return h + out, (new_conv, new_ssm)
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache: Dict,
+                tokens: jax.Array, pos: jax.Array) -> Tuple[jax.Array, Dict]:
+    B = tokens.shape[0]
+    x = nn.embed(cfg, params["embed"], tokens)        # [B, d]
+
+    def scan_body(h, xs):
+        lp, conv_st, ssm_st = xs
+        h2, states = decode_layer(cfg, lp, h, conv_st, ssm_st)
+        return h2, states
+
+    h, (conv_s, ssm_s) = nn.scan_layers(
+        scan_body, x, (params["layers"], cache["conv"], cache["ssm"])
+    )
+    h = nn.apply_norm(cfg, params["final_norm"], h)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = nn.unembed(cfg, head, h)
+    return logits, {"conv": conv_s, "ssm": ssm_s, "lens": cache["lens"] + 1}

@@ -1,0 +1,108 @@
+"""Family dispatch: a uniform model API over all six families.
+
+Every family exposes the same five entry points; extra modality inputs
+(vlm patches, encdec frames) travel in the ``batch`` dict and the
+adapters route them to the family-specific keyword.
+
+    api = get_api(cfg)
+    params = api.init(cfg, key)
+    logits, aux = api.forward(cfg, params, batch)          # training
+    logits, cache = api.prefill(cfg, params, batch, max_len=...)
+    logits, cache = api.decode_step(cfg, params, cache, tokens, pos)
+    cache = api.init_cache(cfg, batch_size, max_len)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+from . import encdec, hybrid, mamba2, transformer
+from .config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ModelApi:
+    init: Callable[[ModelConfig, jax.Array], Dict]
+    forward: Callable[..., Tuple[jax.Array, jax.Array]]
+    prefill: Callable[..., Tuple[jax.Array, Dict]]
+    decode_step: Callable[..., Tuple[jax.Array, Dict]]
+    init_cache: Callable[..., Dict]
+
+
+def _tf_forward(cfg, params, batch, *, remat=False, attn_impl="auto"):
+    return transformer.forward(
+        cfg, params, batch["tokens"], patches=batch.get("patches"),
+        remat=remat, attn_impl=attn_impl,
+    )
+
+
+def _tf_prefill(cfg, params, batch, *, max_len=None, attn_impl="auto"):
+    return transformer.prefill(
+        cfg, params, batch["tokens"], patches=batch.get("patches"),
+        max_len=max_len, attn_impl=attn_impl,
+    )
+
+
+def _mamba_forward(cfg, params, batch, *, remat=False, attn_impl="auto"):
+    return mamba2.forward(cfg, params, batch["tokens"],
+                          remat=remat, attn_impl=attn_impl)
+
+
+def _mamba_prefill(cfg, params, batch, *, max_len=None, attn_impl="auto"):
+    return mamba2.prefill(cfg, params, batch["tokens"],
+                          max_len=max_len, attn_impl=attn_impl)
+
+
+def _hybrid_forward(cfg, params, batch, *, remat=False, attn_impl="auto"):
+    return hybrid.forward(cfg, params, batch["tokens"],
+                          remat=remat, attn_impl=attn_impl)
+
+
+def _hybrid_prefill(cfg, params, batch, *, max_len=None, attn_impl="auto"):
+    return hybrid.prefill(cfg, params, batch["tokens"],
+                          max_len=max_len, attn_impl=attn_impl)
+
+
+def _encdec_forward(cfg, params, batch, *, remat=False, attn_impl="auto"):
+    return encdec.forward(cfg, params, batch["tokens"],
+                          frames=batch["frames"],
+                          remat=remat, attn_impl=attn_impl)
+
+
+def _encdec_prefill(cfg, params, batch, *, max_len=None, attn_impl="auto"):
+    return encdec.prefill(cfg, params, batch["tokens"],
+                          frames=batch["frames"],
+                          max_len=max_len, attn_impl=attn_impl)
+
+
+_FAMILY_API: Dict[str, ModelApi] = {
+    "dense": ModelApi(transformer.init, _tf_forward, _tf_prefill,
+                      transformer.decode_step, transformer.init_cache),
+    "moe": ModelApi(transformer.init, _tf_forward, _tf_prefill,
+                    transformer.decode_step, transformer.init_cache),
+    "vlm": ModelApi(transformer.init, _tf_forward, _tf_prefill,
+                    transformer.decode_step, transformer.init_cache),
+    "ssm": ModelApi(mamba2.init, _mamba_forward, _mamba_prefill,
+                    mamba2.decode_step, mamba2.init_cache),
+    "hybrid": ModelApi(hybrid.init, _hybrid_forward, _hybrid_prefill,
+                       hybrid.decode_step, hybrid.init_cache),
+    "encdec": ModelApi(encdec.init, _encdec_forward, _encdec_prefill,
+                       encdec.decode_step, encdec.init_cache),
+}
+
+
+def get_api(cfg: ModelConfig) -> ModelApi:
+    try:
+        return _FAMILY_API[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown model family {cfg.family!r}") from None
+
+
+def abstract_params(cfg: ModelConfig) -> Dict:
+    """Parameter shapes without allocation (ShapeDtypeStructs)."""
+    api = get_api(cfg)
+    return jax.eval_shape(lambda k: api.init(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jax.numpy.uint32))

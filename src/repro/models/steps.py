@@ -1,0 +1,123 @@
+"""Train / prefill / serve step functions — the units the launcher jits.
+
+* ``loss_fn``       — next-token cross-entropy (f32 logsumexp over the
+  possibly vocab-sharded logits) + MoE aux loss;
+* ``make_train_step`` — value_and_grad + optimizer update, full remat;
+* ``make_prefill_step`` / ``make_serve_step`` — the serving iteration
+  units: prefill the prompt / advance every active decode slot one
+  token (greedy or temperature sampling).
+
+All steps take ``batch`` dicts (tokens, labels, and optional modality
+stubs: vlm patches / encdec frames) so one dry-run driver covers every
+family.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from .config import ModelConfig
+from .registry import get_api
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token cross-entropy. logits [B, L, V] (any dtype),
+    labels [B, L] int32. Computed in f32; works with vocab-sharded
+    logits (logsumexp lowers to a partial reduce + all-reduce)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)                        # [B, L]
+    true_logit = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - true_logit
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+    return nll.mean()
+
+
+def loss_fn(cfg: ModelConfig, params: Dict, batch: Dict, *,
+            remat: bool = True, attn_impl: str = "auto") -> Tuple[jax.Array, Dict]:
+    api = get_api(cfg)
+    logits, aux = api.forward(cfg, params, batch, remat=remat,
+                              attn_impl=attn_impl)
+    labels = batch["labels"]
+    # vlm: logits cover [prefix + tokens]; score the token tail only.
+    L = labels.shape[1]
+    if logits.shape[1] != L:
+        logits = logits[:, -L:]
+    logits = constrain(logits, "batch", None, "model")
+    ce = cross_entropy(logits, labels, batch.get("loss_mask"))
+    total = ce + cfg.router_aux_coef * aux
+    return total, {"loss": total, "ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, optimizer, *,
+                    remat: bool = True, attn_impl: str = "auto") -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). ``optimizer`` is a repro.distributed.optimizer.Optimizer."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, remat=remat, attn_impl=attn_impl),
+            has_aux=True,
+        )(params)
+        params, opt_state, opt_metrics = optimizer.update(
+            params, grads, opt_state
+        )
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+def sample_logits(logits: jax.Array, rng: Optional[jax.Array],
+                  temperature: float = 0.0) -> jax.Array:
+    """Greedy (temperature=0) or temperature sampling. logits [B, V]."""
+    if temperature <= 0.0 or rng is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        rng, logits.astype(jnp.float32) / temperature, axis=-1
+    ).astype(jnp.int32)
+
+
+def make_prefill_step(cfg: ModelConfig, *, max_len: int,
+                      attn_impl: str = "auto",
+                      temperature: float = 0.0) -> Callable:
+    """prefill_step(params, batch, rng) -> (first_tokens, cache)."""
+    api = get_api(cfg)
+
+    def prefill_step(params, batch, rng):
+        logits, cache = api.prefill(cfg, params, batch, max_len=max_len,
+                                    attn_impl=attn_impl)
+        toks = sample_logits(logits, rng, temperature)
+        return toks, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, attn_impl: str = "auto",
+                    temperature: float = 0.0) -> Callable:
+    """serve_step(params, cache, tokens, pos, rng) -> (next_tokens, cache).
+
+    One new token per active sequence against the KV/SSM cache — the
+    unit the decode_32k / long_500k dry-run cells lower.
+    """
+    api = get_api(cfg)
+    del attn_impl  # decode paths dispatch internally
+
+    def serve_step(params, cache, tokens, pos, rng):
+        logits, cache = api.decode_step(cfg, params, cache, tokens, pos)
+        toks = sample_logits(logits, rng, temperature)
+        return toks, cache
+
+    return serve_step

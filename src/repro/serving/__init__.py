@@ -1,0 +1,25 @@
+"""Serving substrate: the execution layer DriftSched schedules onto.
+
+* :mod:`kv_cache`   — vLLM-style paged KV pool + host-side allocator
+  (the TPU adaptation of PagedAttention feeds from it);
+* :mod:`cost_model` — service-time model: L4-calibrated for paper
+  reproduction, roofline-derived for TPU projection;
+* :mod:`simulator`  — discrete-event simulation of the serving cluster
+  (arrivals, batching, workers, failures, telemetry);
+* :mod:`engine`     — the real JAX continuous-batching engine (slot
+  ring, paged decode) exercised by integration tests and examples;
+* :mod:`metrics`    — latency/fairness/drift aggregation shared by the
+  benchmarks.
+"""
+
+from .cost_model import CostModel, L4_QWEN_1_8B
+from .engine import EngineConfig, ServingEngine
+from .kv_cache import PagedAllocator, PagedPool
+from .metrics import RunMetrics, percentile, summarize_run
+from .simulator import ClusterSimulator, SimConfig
+
+__all__ = [
+    "ClusterSimulator", "CostModel", "EngineConfig", "L4_QWEN_1_8B",
+    "PagedAllocator", "PagedPool", "RunMetrics", "ServingEngine",
+    "SimConfig", "percentile", "summarize_run",
+]

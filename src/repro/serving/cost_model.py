@@ -1,0 +1,113 @@
+"""Service-time model for the cluster simulator.
+
+Two calibrations:
+
+* ``L4_QWEN_1_8B`` — mirrors the paper's measurement platform (NVIDIA
+  L4, Qwen1.5-1.8B FP16, vLLM, GPU batch 32). Constants are fitted so
+  the FIFO baseline lands on the paper's own observations: per-batch
+  GPU execution P50 ~= 10.5 s with a tight tail (P99 ~= 11.3 s, Fig 9),
+  queue-dominated e2e latencies (Tables III-IV).
+* ``from_roofline`` — TPU projection: reads a roofline JSON produced by
+  the dry-run analysis and converts the per-step lower bound into
+  per-token service rates, so the same simulator projects DriftSched
+  behaviour onto the v5e serving deployment.
+
+Batch execution is atomic at the scheduler's granularity (the paper
+records worker timestamps around each GPU batch, Sec. II-I):
+
+    T(batch) = t_base + c_prefill * sum(prompt_tokens)
+             + c_decode_max * max(output_tokens)       # batch walks to
+             + c_decode_sum * sum(output_tokens)       # its longest member
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass
+from typing import Iterable, Optional
+
+from ..core.request import Request
+
+
+@dataclass(frozen=True)
+class CostModel:
+    name: str
+    t_base: float            # fixed per-batch launch/teardown
+    c_prefill: float         # s per prompt token (summed over batch)
+    c_decode_max: float      # s per token of the batch's longest output
+    c_decode_sum: float      # s per output token summed over batch
+    jitter_sigma: float = 0.02   # lognormal execution noise
+
+    def batch_time(self, requests: Iterable[Request], *,
+                   jitter: float = 1.0) -> float:
+        reqs = list(requests)
+        if not reqs:
+            return 0.0
+        sum_prompt = sum(r.prompt_tokens for r in reqs)
+        outs = [min(r.true_output_tokens, r.max_tokens) for r in reqs]
+        t = (self.t_base
+             + self.c_prefill * sum_prompt
+             + self.c_decode_max * max(outs)
+             + self.c_decode_sum * sum(outs))
+        return t * jitter
+
+    def jitter(self, rng) -> float:
+        if self.jitter_sigma <= 0:
+            return 1.0
+        return math.exp(rng.gauss(0.0, self.jitter_sigma)
+                        - 0.5 * self.jitter_sigma ** 2)
+
+
+# Paper platform: Qwen1.5-1.8B FP16 on one NVIDIA L4 via vLLM.
+# Calibrated by grid search against the paper's own FIFO/SJF
+# observations (Tables III-IV): full FIFO batches execute in ~10-12 s
+# with a tight tail (Fig 9), total GPU time is mostly token-volume
+# driven (continuous batching) with a batch-walk component on the
+# longest member, giving SJF its throughput edge. See EXPERIMENTS.md
+# §Paper-validation for the residuals.
+L4_QWEN_1_8B = CostModel(
+    name="l4-qwen1.5-1.8b",
+    t_base=0.25,
+    c_prefill=5e-5,
+    c_decode_max=3.7e-3,
+    c_decode_sum=1.22e-3,
+)
+
+
+# Alternative calibration: batch time dominated by the longest member
+# (each dispatched batch runs to completion before the next, so the
+# near-cap report in every saturated FIFO batch walks it). Under this
+# regime SJF's homogeneous batches genuinely shorten total GPU time —
+# reproducing the paper's SJF P99 win (Table III) — but shorts then
+# drain so fast that SJF's P50/wait land far below the paper's.
+# bench_tail_latency reports both regimes; the truth of the paper's
+# vLLM backend sits between them (EXPERIMENTS.md §Paper-validation).
+L4_MAX_DRIVEN = CostModel(
+    name="l4-max-driven",
+    t_base=0.6,
+    c_prefill=5e-5,
+    c_decode_max=9.0e-3,
+    c_decode_sum=1.5e-4,
+)
+
+
+def from_roofline(path: str, *, batch_capacity: int = 32,
+                  name: Optional[str] = None) -> CostModel:
+    """TPU projection from a decode-cell roofline JSON: the step-time
+    lower bound of one decode iteration (batch B) gives c_decode.
+    Prefill cost from the matching prefill cell if present."""
+    with open(path) as f:
+        rec = json.load(f)
+    r = rec["roofline"]
+    step = float(r["step_time_lower_bound_s"])
+    # one decode step advances every active slot one token
+    c_decode_sum = step / max(batch_capacity, 1)
+    return CostModel(
+        name=name or f"roofline:{rec['arch']}",
+        t_base=0.005,
+        c_prefill=step / (batch_capacity * 64),   # chunked-prefill share
+        c_decode_max=0.0,                          # continuous batching:
+        c_decode_sum=c_decode_sum,                 # cost ~ total tokens
+        jitter_sigma=0.01,
+    )

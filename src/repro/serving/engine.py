@@ -1,0 +1,277 @@
+"""The real JAX continuous-batching engine (slot-ring design).
+
+XLA needs static shapes, so the iteration-level batching of Orca/vLLM
+becomes a fixed-size ring of decode slots:
+
+* ``n_slots`` sequences decode in lockstep, one token per engine step
+  (a single jitted ``serve_step`` on the whole slot batch);
+* join = prefill the prompt (jitted per prompt-length bucket) and
+  scatter the resulting cache into the slot's batch index;
+* leave = mark the slot free (its lane keeps computing garbage that is
+  masked out — the standard TPU serving trade);
+* per-slot positions: each lane decodes at its own depth (the
+  ``pos``-vector decode path in models/layers.py).
+
+The engine drives the *identical* DriftScheduler state machine the
+simulator uses — admission, dispatch, completion feedback (Eq. 5-6) —
+so scheduling behaviour validated on the simulator transfers 1:1.
+
+EOS: with randomly-initialised smoke models there is no semantic EOS,
+so requests stop at their ground-truth output length (oracle EOS,
+clipped by max_tokens) — exactly the signal the drift compensator must
+learn. A real deployment swaps in token-id EOS detection.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.request import Request, RequestState
+from ..core.scheduler import DriftScheduler
+from ..models.config import ModelConfig
+from ..models.registry import get_api
+from ..models.steps import sample_logits
+from .metrics import RunMetrics, summarize_run
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    n_slots: int = 8
+    max_len: int = 256               # per-slot cache capacity
+    prompt_buckets: Tuple[int, ...] = (16, 32, 64)
+    temperature: float = 0.0
+    batch_wait_steps: int = 0
+    # vLLM-style paged KV pool instead of the slot-ring cache
+    # (transformer-family archs; kernels/paged_attention on TPU)
+    paged: bool = False
+    page_size: int = 16
+
+
+def _bucket(n: int, buckets: Tuple[int, ...]) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+@dataclass
+class SlotState:
+    req: Optional[Request] = None
+    generated: int = 0
+    target: int = 0
+    last_token: int = 0
+
+
+class ServingEngine:
+    """Continuous-batching engine for one model on the local backend."""
+
+    def __init__(self, cfg: ModelConfig, params, scheduler: DriftScheduler,
+                 config: Optional[EngineConfig] = None,
+                 extras: Optional[Dict] = None) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.sched = scheduler
+        self.ecfg = config or EngineConfig()
+        self.extras = extras or {}
+        self.api = get_api(cfg)
+        n, S = self.ecfg.n_slots, self.ecfg.max_len
+        self.slots: List[SlotState] = [SlotState() for _ in range(n)]
+        self.step_count = 0
+        self.busy_steps = 0
+        self._rng = jax.random.PRNGKey(0)
+        self._prefill_cache = {}
+
+        if self.ecfg.paged:
+            if cfg.family not in ("dense", "moe", "vlm"):
+                raise ValueError(
+                    f"paged engine supports transformer-family archs, "
+                    f"not {cfg.family!r} (SSM state is O(1) already)")
+            from .kv_cache import PagedAllocator, PagedPool
+            pages_per_seq = -(-S // self.ecfg.page_size)
+            # pool has one extra page the allocator never hands out:
+            # inactive slots scatter their (masked) writes into it
+            self.alloc = PagedAllocator(
+                n_pages=n * pages_per_seq,
+                page_size=self.ecfg.page_size,
+                pages_per_seq=pages_per_seq)
+            self.pool = PagedPool.create(cfg, self.alloc.n_pages + 1,
+                                         self.ecfg.page_size)
+            self._decode_paged = jax.jit(self._decode_paged_fn)
+        else:
+            self.cache = self.api.init_cache(cfg, n, S)
+            self._decode = jax.jit(self._decode_fn)
+
+    # --- jitted units ---------------------------------------------------
+    def _decode_fn(self, params, cache, tokens, pos, rng):
+        logits, cache = self.api.decode_step(self.cfg, params, cache,
+                                             tokens, pos)
+        toks = sample_logits(logits, rng, self.ecfg.temperature)
+        return toks, cache
+
+    def _decode_paged_fn(self, params, pool, tokens, page_table,
+                         seq_lens, rng):
+        from ..models import transformer
+        logits, pool = transformer.decode_step_paged(
+            self.cfg, params, pool, tokens, page_table, seq_lens)
+        toks = sample_logits(logits, rng, self.ecfg.temperature)
+        return toks, pool
+
+    def _prefill_fn_for(self, bucket: int):
+        if bucket not in self._prefill_cache:
+            def fn(params, batch, rng):
+                logits, cache = self.api.prefill(
+                    self.cfg, params, batch, max_len=self.ecfg.max_len)
+                return sample_logits(logits, rng,
+                                     self.ecfg.temperature), cache
+            self._prefill_cache[bucket] = jax.jit(fn)
+        return self._prefill_cache[bucket]
+
+    # --- slot management --------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.req is None]
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.req is not None]
+
+    def _insert_cache(self, slot: int, cache_1: Dict) -> None:
+        """Scatter a batch-1 prefill cache into slot ``slot``."""
+        def ins(full, one):
+            axis = 1 if full.ndim > 1 else 0
+            idx = [slice(None)] * full.ndim
+            idx[axis] = slot
+            return full.at[tuple(idx)].set(
+                jnp.take(one, 0, axis=axis).astype(full.dtype))
+        self.cache = jax.tree_util.tree_map(ins, self.cache, cache_1)
+
+    def _admit(self, req: Request, slot: int, now: float) -> None:
+        prompt_len = max(req.prompt_tokens, 1)
+        bucket = _bucket(prompt_len, self.ecfg.prompt_buckets)
+        prompt_len = min(prompt_len, bucket)      # truncate to the bucket
+        tokens = np.zeros((1, bucket), np.int32)
+        ids = np.frombuffer(req.prompt.encode()[:prompt_len * 4],
+                            dtype=np.uint8)[:prompt_len]
+        if len(ids):
+            tokens[0, -len(ids):] = ids % max(self.cfg.vocab - 1, 1) + 1
+        batch = {"tokens": jnp.asarray(tokens)}
+        if self.cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (1, self.cfg.prefix_len, self.cfg.d_model), jnp.bfloat16)
+        if self.cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (1, self.cfg.enc_seq, self.cfg.d_model), jnp.bfloat16)
+        self._rng, sub = jax.random.split(self._rng)
+        if self.ecfg.paged:
+            from ..models import transformer
+            from .kv_cache import write_prefill_pages
+            logits, k_lv, v_lv = transformer.prefill_kv(
+                self.cfg, self.params, batch["tokens"],
+                patches=batch.get("patches"))
+            pages = self.alloc.alloc(slot, bucket)
+            self.pool = write_prefill_pages(
+                self.pool, (k_lv[:, 0], v_lv[:, 0]), pages, bucket)
+            tok = sample_logits(logits, sub, self.ecfg.temperature)
+        else:
+            tok, cache_1 = self._prefill_fn_for(bucket)(self.params,
+                                                        batch, sub)
+            self._insert_cache(slot, cache_1)
+        st = self.slots[slot]
+        st.req = req
+        st.generated = 1                       # prefill emitted one token
+        st.target = max(1, min(req.true_output_tokens, req.max_tokens,
+                               self.ecfg.max_len - bucket - 2))
+        st.last_token = int(tok[0])
+        req.state = RequestState.EXECUTING
+        req.exec_start = now
+
+    def _retire(self, slot: int, now: float) -> None:
+        st = self.slots[slot]
+        req = st.req
+        req.exec_end = now
+        self.sched.complete(req, st.generated, now)
+        if self.ecfg.paged:
+            self.alloc.free(slot)
+        st.req = None
+        st.generated = 0
+        st.target = 0
+
+    # --- main loop ----------------------------------------------------------
+    def step(self, now: float) -> int:
+        """One engine iteration: admit into free slots, advance every
+        active slot one token, retire finished ones. Returns number of
+        completions this step."""
+        # admission
+        for slot in self.free_slots():
+            if self.sched.queue_depth() == 0:
+                break
+            req = self.sched.dispatch(now)
+            if req is None:
+                break
+            self._admit(req, slot, now)
+
+        active = self.active_slots()
+        if not active:
+            return 0
+
+        tokens = np.zeros((self.ecfg.n_slots,), np.int32)
+        for i in active:
+            tokens[i] = self.slots[i].last_token
+        self._rng, sub = jax.random.split(self._rng)
+        if self.ecfg.paged:
+            sids = [i if self.slots[i].req is not None else None
+                    for i in range(self.ecfg.n_slots)]
+            pt = self.alloc.table_array(sids)
+            scratch = self.pool.n_pages - 1      # never allocated: inactive
+            for i, sid in enumerate(sids):       # slots write there
+                if sid is None:
+                    pt[i, :] = scratch
+            lens = self.alloc.lens_array(sids)
+            toks, new_pool = self._decode_paged(
+                self.params, {"k": self.pool.k, "v": self.pool.v},
+                jnp.asarray(tokens), jnp.asarray(pt),
+                jnp.asarray(lens), sub)
+            from .kv_cache import PagedPool
+            self.pool = PagedPool(k=new_pool["k"], v=new_pool["v"],
+                                  page_size=self.ecfg.page_size)
+            for i in active:
+                self.alloc.extend(i, 1)
+        else:
+            pos = np.asarray(self.cache["lens"])     # per-slot depth
+            toks, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(pos, np.int32), sub)
+        toks = np.asarray(toks)
+
+        done = 0
+        for i in active:
+            st = self.slots[i]
+            st.generated += 1
+            st.last_token = int(toks[i])
+            if st.generated >= st.target:       # oracle EOS
+                self._retire(i, now)
+                done += 1
+        self.step_count += 1
+        self.busy_steps += 1
+        return done
+
+    def run_until_drained(self, *, max_steps: int = 100_000,
+                          dt: float = 1.0) -> RunMetrics:
+        """Process everything queued in the scheduler; ``dt`` is the
+        simulated wall-clock per engine step (CPU steps are not
+        representative of TPU step time)."""
+        now = 0.0
+        for _ in range(max_steps):
+            if (self.sched.queue_depth() == 0
+                    and not self.active_slots()):
+                break
+            self.step(now)
+            now += dt
+        return summarize_run(self.sched.policy.name,
+                             self.sched.config.bias_enabled,
+                             self.sched.completed,
+                             busy_time=float(self.busy_steps) * dt)

@@ -1,0 +1,167 @@
+"""Paged KV-cache pool + host-side allocator (vLLM's PagedAttention,
+adapted to TPU).
+
+The GPU version's warp-level gather becomes page-granular DMA issued by
+the Pallas paged-attention kernel (kernels/paged_attention.py) via a
+scalar-prefetched page table. This module owns the other half of the
+design: the global page pool (one JAX array per K/V, page-major) and
+the host-side allocator (free list, per-sequence page tables, alloc on
+prefill / extend on decode / free on completion).
+
+Fragmentation-free by construction: every allocation is page-granular,
+exactly the property the vLLM paper exploits to push batch sizes up.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig
+
+
+@dataclass
+class PagedPool:
+    """Device-side page pool for one model: [L, n_pages, page, Hk, hd]."""
+
+    k: jax.Array
+    v: jax.Array
+    page_size: int
+
+    @classmethod
+    def create(cls, cfg: ModelConfig, n_pages: int, page_size: int = 128,
+               dtype=None) -> "PagedPool":
+        dtype = dtype or jnp.dtype(cfg.dtype)
+        shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.d_head)
+        return cls(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   page_size=page_size)
+
+    @property
+    def n_pages(self) -> int:
+        return self.k.shape[1]
+
+
+class OutOfPagesError(RuntimeError):
+    pass
+
+
+class PagedAllocator:
+    """Host-side page accounting. Deterministic (free list is a stack)."""
+
+    def __init__(self, n_pages: int, page_size: int,
+                 pages_per_seq: int) -> None:
+        self.page_size = page_size
+        self.pages_per_seq = pages_per_seq
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        # seq_id -> (page ids, current token length)
+        self._tables: Dict[int, List[int]] = {}
+        self._lens: Dict[int, int] = {}
+        self.n_pages = n_pages
+
+    # ------------------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return max(1, -(-n_tokens // self.page_size))
+
+    def can_admit(self, prompt_tokens: int, max_new: int) -> bool:
+        return self.pages_needed(prompt_tokens + max_new) <= self.free_pages
+
+    def alloc(self, seq_id: int, n_tokens: int) -> List[int]:
+        """Allocate pages for a prefill of ``n_tokens``."""
+        if seq_id in self._tables:
+            raise ValueError(f"seq {seq_id} already allocated")
+        need = self.pages_needed(n_tokens)
+        if need > len(self._free):
+            raise OutOfPagesError(
+                f"need {need} pages, only {len(self._free)} free")
+        pages = [self._free.pop() for _ in range(need)]
+        self._tables[seq_id] = pages
+        self._lens[seq_id] = n_tokens
+        return pages
+
+    def extend(self, seq_id: int, n_new: int = 1) -> List[int]:
+        """Grow a sequence by ``n_new`` tokens; allocate pages on
+        boundary crossings. Returns any newly-allocated pages."""
+        pages = self._tables[seq_id]
+        old_len = self._lens[seq_id]
+        new_len = old_len + n_new
+        need = self.pages_needed(new_len) - len(pages)
+        fresh: List[int] = []
+        if need > 0:
+            if need > len(self._free):
+                raise OutOfPagesError(
+                    f"seq {seq_id}: need {need} pages, "
+                    f"{len(self._free)} free")
+            fresh = [self._free.pop() for _ in range(need)]
+            pages.extend(fresh)
+        self._lens[seq_id] = new_len
+        return fresh
+
+    def free(self, seq_id: int) -> None:
+        for p in self._tables.pop(seq_id):
+            self._free.append(p)
+        del self._lens[seq_id]
+
+    def seq_len(self, seq_id: int) -> int:
+        return self._lens[seq_id]
+
+    def table(self, seq_id: int) -> List[int]:
+        return self._tables[seq_id]
+
+    # ------------------------------------------------------------------
+    def table_array(self, seq_ids: List[Optional[int]]) -> np.ndarray:
+        """[B, pages_per_seq] int32 physical page ids (0-padded) for the
+        current batch — the scalar-prefetch operand of the kernel."""
+        out = np.zeros((len(seq_ids), self.pages_per_seq), np.int32)
+        for i, sid in enumerate(seq_ids):
+            if sid is None:
+                continue
+            pages = self._tables[sid]
+            out[i, :len(pages)] = pages
+        return out
+
+    def lens_array(self, seq_ids: List[Optional[int]]) -> np.ndarray:
+        return np.array([0 if sid is None else self._lens[sid]
+                         for sid in seq_ids], np.int32)
+
+    # --- checkpoint/restore -------------------------------------------
+    def state_dict(self) -> dict:
+        return {"free": list(self._free),
+                "tables": {str(k): v for k, v in self._tables.items()},
+                "lens": {str(k): v for k, v in self._lens.items()}}
+
+    def load_state_dict(self, state: dict) -> None:
+        self._free = list(state["free"])
+        self._tables = {int(k): list(v) for k, v in state["tables"].items()}
+        self._lens = {int(k): int(v) for k, v in state["lens"].items()}
+
+
+def write_prefill_pages(pool: PagedPool, layer_kv: Tuple[jax.Array, jax.Array],
+                        pages: List[int], n_tokens: int) -> PagedPool:
+    """Scatter a prefilled [L, S, Hk, hd] K/V into the pool's pages."""
+    k_new, v_new = layer_kv
+    P = pool.page_size
+    n_full = n_tokens // P
+    k = pool.k
+    v = pool.v
+    for i, page in enumerate(pages):
+        lo = i * P
+        hi = min(lo + P, n_tokens)
+        if lo >= n_tokens:
+            break
+        chunk_k = k_new[:, lo:hi]
+        chunk_v = v_new[:, lo:hi]
+        if hi - lo < P:
+            pad = P - (hi - lo)
+            chunk_k = jnp.pad(chunk_k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            chunk_v = jnp.pad(chunk_v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = k.at[:, page].set(chunk_k.astype(k.dtype))
+        v = v.at[:, page].set(chunk_v.astype(v.dtype))
+    return PagedPool(k=k, v=v, page_size=P)

@@ -1,0 +1,143 @@
+"""Run-level metrics aggregation (Sec. II-I / IV).
+
+Computes everything the paper's tables report from a list of completed
+requests: latency percentiles (P50/P95/P99), queue waits, per-tenant
+and per-job-class breakdowns, GPU execution latency, throughput, and
+Jain's fairness index over tenant latencies.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence
+
+from ..core.request import JobClass, Request, TenantTier
+
+
+def percentile(values: Sequence[float], p: float) -> float:
+    """Linear-interpolation percentile (numpy 'linear' method)."""
+    xs = sorted(values)
+    if not xs:
+        return float("nan")
+    if len(xs) == 1:
+        return xs[0]
+    rank = (p / 100.0) * (len(xs) - 1)
+    lo = int(math.floor(rank))
+    hi = min(lo + 1, len(xs) - 1)
+    frac = rank - lo
+    return xs[lo] * (1 - frac) + xs[hi] * frac
+
+
+def jain_index(values: Sequence[float]) -> float:
+    xs = [v for v in values if v is not None]
+    if not xs:
+        return float("nan")
+    s = sum(xs)
+    s2 = sum(v * v for v in xs)
+    return (s * s) / (len(xs) * s2) if s2 > 0 else 1.0
+
+
+@dataclass
+class LatencyStats:
+    n: int = 0
+    mean: float = float("nan")
+    p50: float = float("nan")
+    p95: float = float("nan")
+    p99: float = float("nan")
+
+    @classmethod
+    def of(cls, values: Sequence[float]) -> "LatencyStats":
+        vals = [v for v in values if v is not None]
+        if not vals:
+            return cls()
+        return cls(n=len(vals), mean=sum(vals) / len(vals),
+                   p50=percentile(vals, 50), p95=percentile(vals, 95),
+                   p99=percentile(vals, 99))
+
+    def as_dict(self) -> dict:
+        return {"n": self.n, "mean": self.mean, "p50": self.p50,
+                "p95": self.p95, "p99": self.p99}
+
+
+@dataclass
+class RunMetrics:
+    """Everything a benchmark needs from one experiment run."""
+
+    policy: str
+    bias_enabled: bool
+    e2e: LatencyStats
+    queue_wait: LatencyStats
+    gpu_exec: LatencyStats
+    per_tenant: Dict[str, dict]
+    per_class_wait: Dict[str, float]
+    throughput_rps: float
+    gpu_utilization: float
+    fairness: float
+    n_completed: int
+    n_failed_dispatches: int
+    makespan: float
+
+    def as_dict(self) -> dict:
+        return {
+            "policy": self.policy,
+            "bias_enabled": self.bias_enabled,
+            "e2e": self.e2e.as_dict(),
+            "queue_wait": self.queue_wait.as_dict(),
+            "gpu_exec": self.gpu_exec.as_dict(),
+            "per_tenant": self.per_tenant,
+            "per_class_wait": self.per_class_wait,
+            "throughput_rps": self.throughput_rps,
+            "gpu_utilization": self.gpu_utilization,
+            "fairness": self.fairness,
+            "n_completed": self.n_completed,
+            "n_failed_dispatches": self.n_failed_dispatches,
+            "makespan": self.makespan,
+        }
+
+
+def summarize_run(policy: str, bias_enabled: bool,
+                  completed: Iterable[Request], *,
+                  busy_time: float = 0.0,
+                  n_failed_dispatches: int = 0) -> RunMetrics:
+    reqs = list(completed)
+    e2e = [r.e2e_latency for r in reqs]
+    waits = [r.queue_wait for r in reqs]
+    execs = [r.gpu_latency for r in reqs]
+
+    per_tenant = {}
+    for tier in TenantTier:
+        sel = [r for r in reqs if r.tenant == tier]
+        per_tenant[tier.label] = {
+            "latency": LatencyStats.of([r.e2e_latency for r in sel]).as_dict(),
+            "queue_wait": LatencyStats.of([r.queue_wait for r in sel]).as_dict(),
+        }
+
+    per_class = {}
+    for jc in JobClass:
+        sel = [r.queue_wait for r in reqs
+               if r.estimate and r.estimate.job_class == jc]
+        sel = [w for w in sel if w is not None]
+        per_class[jc.value] = sum(sel) / len(sel) if sel else float("nan")
+
+    makespan = max((r.completion_time for r in reqs
+                    if r.completion_time is not None), default=0.0)
+    tenant_means = [per_tenant[t.label]["latency"]["mean"]
+                    for t in TenantTier
+                    if per_tenant[t.label]["latency"]["n"] > 0]
+
+    return RunMetrics(
+        policy=policy,
+        bias_enabled=bias_enabled,
+        e2e=LatencyStats.of(e2e),
+        queue_wait=LatencyStats.of(waits),
+        gpu_exec=LatencyStats.of(execs),
+        per_tenant=per_tenant,
+        per_class_wait=per_class,
+        throughput_rps=len(reqs) / makespan if makespan > 0 else 0.0,
+        gpu_utilization=busy_time / makespan if makespan > 0 else 0.0,
+        fairness=jain_index(tenant_means),
+        n_completed=len(reqs),
+        n_failed_dispatches=n_failed_dispatches,
+        makespan=makespan,
+    )

@@ -1,0 +1,30 @@
+"""Shared scan wrapper so analysis tooling can force full unrolling.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE (trip count is
+opaque to it), so the roofline probes unroll every structured loop —
+layer stacks *and* the blockwise kernel-reference scans (chunked
+attention KV blocks, SSD chunk recurrence) — to measure true
+FLOPs/bytes/collectives. Production lowering keeps rolled loops
+(compile time, code size).
+"""
+
+from __future__ import annotations
+
+import jax
+
+_UNROLL = False
+
+
+def set_scan_unroll(flag: bool) -> None:
+    global _UNROLL
+    _UNROLL = bool(flag)
+
+
+def scan_unroll_enabled() -> bool:
+    return _UNROLL
+
+
+def scan(body, init, xs, **kwargs):
+    if _UNROLL:
+        kwargs["unroll"] = True
+    return jax.lax.scan(body, init, xs, **kwargs)

@@ -1,0 +1,100 @@
+"""Per-architecture smoke tests (assignment requirement): instantiate a
+REDUCED same-family config, run one forward + one train step on CPU,
+assert output shapes + no NaNs. Full configs are exercised only via the
+dry-run (ShapeDtypeStruct, no allocation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, smoke_config
+from repro.distributed.optimizer import Optimizer, OptimizerConfig
+from repro.models.registry import get_api
+from repro.models.steps import make_prefill_step, make_serve_step, \
+    make_train_step
+
+
+def _batch(cfg, key, B=2, L=16, labels=True):
+    tok = jax.random.randint(key, (B, L), 0, cfg.vocab)
+    batch = {"tokens": tok}
+    if labels:
+        batch["labels"] = jnp.roll(tok, -1, axis=1)
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.zeros((B, cfg.prefix_len, cfg.d_model),
+                                     jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = 0.01 * jax.random.normal(
+            key, (B, cfg.enc_seq, cfg.d_model), jnp.float32
+        ).astype(jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finiteness(arch):
+    cfg = smoke_config(arch)
+    api = get_api(cfg)
+    key = jax.random.PRNGKey(0)
+    params = api.init(cfg, key)
+    B, L = 2, 16
+    batch = _batch(cfg, key, B, L)
+    logits, aux = api.forward(cfg, params, batch)
+    expect_len = L + (cfg.prefix_len if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, expect_len, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step_reduces_loss_direction(arch):
+    cfg = smoke_config(arch)
+    api = get_api(cfg)
+    key = jax.random.PRNGKey(1)
+    params = api.init(cfg, key)
+    opt = Optimizer(OptimizerConfig(lr=1e-3, warmup_steps=1, decay_steps=100))
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(cfg, opt))
+    batch = _batch(cfg, key)
+    losses = []
+    for _ in range(2):
+        params, opt_state, m = step(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+        assert np.isfinite(losses[-1])
+        assert float(m["grad_norm"]) > 0
+    assert losses[1] < losses[0]  # same batch: one step must improve it
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_then_decode(arch):
+    cfg = smoke_config(arch)
+    key = jax.random.PRNGKey(2)
+    api = get_api(cfg)
+    params = api.init(cfg, key)
+    B, L, S = 2, 12, 48
+    batch = _batch(cfg, key, B, L, labels=False)
+    pf = make_prefill_step(cfg, max_len=S)
+    sv = make_serve_step(cfg)
+    toks, cache = pf(params, batch, None)
+    assert toks.shape == (B,) and toks.dtype == jnp.int32
+    pos = jnp.asarray(L, jnp.int32)
+    for _ in range(3):
+        toks, cache = sv(params, cache, toks, pos, None)
+        pos = pos + 1
+        assert toks.shape == (B,)
+        assert (np.asarray(toks) >= 0).all()
+        assert (np.asarray(toks) < cfg.vocab).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The published full config loads and has plausible scale."""
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    expected = {
+        "minitron-8b": 8.3e9, "smollm-135m": 1.35e8, "minitron-4b": 4.2e9,
+        "h2o-danube-1.8b": 1.8e9, "whisper-large-v3": 1.5e9,
+        "mamba2-2.7b": 2.7e9, "zamba2-1.2b": 1.2e9,
+        "grok-1-314b": 3.14e11, "llama4-scout-17b-a16e": 1.07e11,
+        "paligemma-3b": 2.6e9,  # decoder-only backbone (SigLIP stubbed)
+    }[arch]
+    assert 0.6 * expected < n < 1.6 * expected, (arch, n, expected)

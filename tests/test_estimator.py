@@ -1,0 +1,98 @@
+"""Unit tests for the paper's core equations (Eq. 1-6)."""
+
+import math
+
+import pytest
+
+from repro.core.estimator import AdaptiveTokenEstimator, BiasStore, DriftConfig
+from repro.core.request import Category, JobClass, TenantTier
+
+
+def test_eq2_factorization():
+    """T_estimated_output = T_base * B * S * F exactly (Eq. 2)."""
+    est = AdaptiveTokenEstimator(DriftConfig())
+    e = est.estimate(Category.SUMMARY, TenantTier.PREMIUM, prompt_tokens=12)
+    assert e.est_output_tokens == pytest.approx(
+        e.t_base * e.bias * e.safety * e.f_input)
+
+
+def test_eq1_budget_includes_input():
+    est = AdaptiveTokenEstimator(DriftConfig())
+    e = est.estimate(Category.SHORT_QA, TenantTier.BATCH, prompt_tokens=40)
+    assert e.t_budget == pytest.approx(40 + e.est_output_tokens)
+
+
+def test_eq3_classification_thresholds():
+    """short <= 128 < medium <= 512 < long (Eq. 3-4)."""
+    est = AdaptiveTokenEstimator(DriftConfig())
+    assert est.classify_budget(128.0) is JobClass.SHORT
+    assert est.classify_budget(128.0001) is JobClass.MEDIUM
+    assert est.classify_budget(512.0) is JobClass.MEDIUM
+    assert est.classify_budget(512.0001) is JobClass.LONG
+
+
+def test_eq5_ema_update():
+    """B_new = (1-a) B_old + a * (T_actual / T_base) (Eq. 5-6)."""
+    cfg = DriftConfig(ema_alpha=0.25)
+    store = BiasStore(cfg)
+    t_base = cfg.base_estimates[Category.REPORT]
+    b1 = store.update(Category.REPORT, t_actual=0.5 * t_base)
+    assert b1 == pytest.approx(0.75 * 1.0 + 0.25 * 0.5)
+    b2 = store.update(Category.REPORT, t_actual=0.5 * t_base)
+    assert b2 == pytest.approx(0.75 * b1 + 0.25 * 0.5)
+
+
+def test_bias_off_freezes_estimates():
+    cfg = DriftConfig(bias_enabled=False)
+    est = AdaptiveTokenEstimator(cfg)
+    before = est.estimate(Category.SUMMARY, TenantTier.STANDARD, 10)
+    for _ in range(50):
+        est.feedback(Category.SUMMARY, 10.0)
+    after = est.estimate(Category.SUMMARY, TenantTier.STANDARD, 10)
+    assert before.est_output_tokens == after.est_output_tokens
+    assert after.bias == cfg.bias_init
+
+
+def test_bias_updates_are_per_category():
+    est = AdaptiveTokenEstimator(DriftConfig())
+    est.feedback(Category.REPORT, 10.0)
+    assert est.bias_store.get(Category.REPORT) < 1.0
+    assert est.bias_store.get(Category.SHORT_QA) == 1.0
+
+
+def test_bias_measured_clip():
+    cfg = DriftConfig(ema_alpha=1.0, bias_clip=(0.1, 4.0))
+    store = BiasStore(cfg)
+    t_base = cfg.base_estimates[Category.SHORT_QA]
+    assert store.update(Category.SHORT_QA, 1e9) == pytest.approx(4.0)
+    assert store.update(Category.SHORT_QA, 0.0) == pytest.approx(0.1)
+
+
+def test_f_input_monotone_and_clipped():
+    cfg = DriftConfig()
+    est = AdaptiveTokenEstimator(cfg)
+    vals = [est.f_input(n) for n in (1, 4, 16, 64, 256, 100_000)]
+    assert all(a <= b for a, b in zip(vals, vals[1:]))
+    lo, hi = cfg.f_input_clip
+    assert all(lo <= v <= hi for v in vals)
+
+
+def test_tenant_safety_ordering():
+    """Premium over-provisions more than Standard more than Batch."""
+    est = AdaptiveTokenEstimator(DriftConfig())
+    outs = [est.estimate(Category.TECHNICAL, t, 20).est_output_tokens
+            for t in (TenantTier.PREMIUM, TenantTier.STANDARD,
+                      TenantTier.BATCH)]
+    assert outs[0] > outs[1] > outs[2]
+
+
+def test_bias_store_checkpoint_roundtrip():
+    cfg = DriftConfig()
+    store = BiasStore(cfg)
+    for i in range(5):
+        store.update(Category.SUMMARY, 100.0 + i)
+    state = store.state_dict()
+    fresh = BiasStore(cfg)
+    fresh.load_state_dict(state)
+    assert fresh.snapshot() == store.snapshot()
+    assert fresh.update_counts() == store.update_counts()

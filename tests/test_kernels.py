@@ -1,0 +1,210 @@
+"""Pallas kernels vs pure-jnp oracles, executed with interpret=True on
+CPU. Shape/dtype sweeps per kernel + chunked-form cross-validation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention, paged_decode_attention, ssd_scan
+from repro.kernels import ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Lq,Lk,H,Hk,D", [
+    (1, 128, 128, 4, 4, 64),       # MHA square
+    (2, 128, 128, 4, 2, 32),       # GQA
+    (1, 64, 256, 8, 1, 64),        # MQA, decode-style Lq < Lk
+    (2, 200, 200, 3, 3, 48),       # ragged (padding path)
+])
+def test_flash_attention_causal(B, Lq, Lk, H, Hk, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (B, Lq, H, D), dtype)
+    k = _rand(ks[1], (B, Lk, Hk, D), dtype)
+    v = _rand(ks[2], (B, Lk, Hk, D), dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_kv=64,
+                          interpret=True)
+    expect = ref.mha_naive(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [32, 128])
+def test_flash_attention_sliding_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, L, H, Hk, D = 1, 256, 4, 2, 32
+    q = _rand(ks[0], (B, L, H, D), jnp.float32)
+    k = _rand(ks[1], (B, L, Hk, D), jnp.float32)
+    v = _rand(ks[2], (B, L, Hk, D), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=64, block_kv=64, interpret=True)
+    expect = ref.mha_naive(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_noncausal_and_softcap():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    B, L, H, D = 1, 128, 2, 64
+    q = _rand(ks[0], (B, L, H, D), jnp.float32)
+    k = _rand(ks[1], (B, L, H, D), jnp.float32)
+    v = _rand(ks[2], (B, L, H, D), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, logit_softcap=30.0,
+                          block_q=64, block_kv=64, interpret=True)
+    expect = ref.mha_naive(q, k, v, causal=False, logit_softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_prefix_lm():
+    """PaliGemma-style: prefix keys visible to all queries."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    B, L, H, D, P = 1, 128, 2, 32, 16
+    q = _rand(ks[0], (B, L, H, D), jnp.float32)
+    k = _rand(ks[1], (B, L, H, D), jnp.float32)
+    v = _rand(ks[2], (B, L, H, D), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, prefix_len=P,
+                          block_q=64, block_kv=64, interpret=True)
+    expect = ref.mha_naive(q, k, v, causal=True, prefix_len=P)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_chunked_reference_matches_naive():
+    """The jnp chunked form (what non-TPU backends lower) == naive."""
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    B, L, H, Hk, D = 2, 160, 4, 2, 32
+    q = _rand(ks[0], (B, L, H, D), jnp.float32)
+    k = _rand(ks[1], (B, L, Hk, D), jnp.float32)
+    v = _rand(ks[2], (B, L, Hk, D), jnp.float32)
+    for kw in (dict(causal=True), dict(causal=False),
+               dict(causal=True, window=48),
+               dict(causal=True, prefix_len=8)):
+        got = ref.flash_attention_chunked(q, k, v, block_kv=64, **kw)
+        expect = ref.mha_naive(q, k, v, **kw)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                                   atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,Hk,D,page,pages_per_seq", [
+    (2, 4, 2, 64, 16, 8),
+    (3, 8, 1, 32, 32, 4),
+    (1, 4, 4, 128, 16, 16),
+])
+def test_paged_decode_attention(B, H, Hk, D, page, pages_per_seq, dtype):
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 4)
+    n_pages = B * pages_per_seq + 3
+    q = _rand(ks[0], (B, H, D), dtype)
+    k_pages = _rand(ks[1], (n_pages, page, Hk, D), dtype)
+    v_pages = _rand(ks[2], (n_pages, page, Hk, D), dtype)
+    # each sequence gets a random non-overlapping page set
+    perm = jax.random.permutation(ks[3], n_pages)[:B * pages_per_seq]
+    page_table = perm.reshape(B, pages_per_seq).astype(jnp.int32)
+    seq_lens = jnp.array(
+        [1 + (7 * i) % (page * pages_per_seq) for i in range(B)], jnp.int32)
+    out = paged_decode_attention(q, k_pages, v_pages, page_table, seq_lens,
+                                 interpret=True)
+    expect = ref.paged_decode_attention_ref(q, k_pages, v_pages, page_table,
+                                            seq_lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+def test_paged_equals_contiguous():
+    """Paged pool gather == contiguous-cache decode attention."""
+    key = jax.random.PRNGKey(6)
+    ks = jax.random.split(key, 4)
+    B, H, Hk, D, page, pps = 2, 4, 2, 32, 16, 4
+    S = page * pps
+    q = _rand(ks[0], (B, H, D), jnp.float32)
+    k_cache = _rand(ks[1], (B, S, Hk, D), jnp.float32)
+    v_cache = _rand(ks[2], (B, S, Hk, D), jnp.float32)
+    lens = jnp.array([37, 61], jnp.int32)
+    # lay the contiguous cache into pages
+    k_pages = k_cache.reshape(B * pps, page, Hk, D)
+    v_pages = v_cache.reshape(B * pps, page, Hk, D)
+    page_table = jnp.arange(B * pps, dtype=jnp.int32).reshape(B, pps)
+    got = ref.paged_decode_attention_ref(q, k_pages, v_pages, page_table, lens)
+    expect = ref.decode_attention_ref(q, k_cache, v_cache, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan (Mamba-2)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,L,H,G,P,N,chunk", [
+    (1, 128, 4, 1, 16, 16, 32),
+    (2, 256, 8, 2, 32, 64, 64),
+    (1, 64, 2, 1, 64, 128, 64),
+])
+def test_ssd_scan_vs_naive(B, L, H, G, P, N, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    x = _rand(ks[0], (B, L, H, P), dtype) * 0.5
+    a = -jnp.abs(_rand(ks[1], (B, L, H), jnp.float32)) * 0.1
+    b = _rand(ks[2], (B, L, G, N), dtype) * 0.5
+    c = _rand(ks[3], (B, L, G, N), dtype) * 0.5
+    out = ssd_scan(x, a.astype(dtype), b, c, chunk=chunk, interpret=True)
+    expect = ref.ssd_naive(x, a.astype(dtype), b, c)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        atol=3e-2 if dtype == jnp.bfloat16 else 1e-4,
+        rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_ssd_chunked_matches_naive_and_carries_state():
+    ks = jax.random.split(jax.random.PRNGKey(8), 4)
+    B, L, H, G, P, N, Q = 2, 192, 4, 2, 16, 32, 64
+    x = _rand(ks[0], (B, L, H, P), jnp.float32) * 0.5
+    a = -jnp.abs(_rand(ks[1], (B, L, H), jnp.float32)) * 0.1
+    b = _rand(ks[2], (B, L, G, N), jnp.float32) * 0.5
+    c = _rand(ks[3], (B, L, G, N), jnp.float32) * 0.5
+    y, state = ref.ssd_chunked(x, a, b, c, chunk=Q, return_final_state=True)
+    expect = ref.ssd_naive(x, a, b, c)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expect),
+                               atol=1e-4, rtol=1e-4)
+    # final state equals stepping the recurrence token by token
+    h = jnp.zeros((B, H, P, N), jnp.float32)
+    for t in range(L):
+        _, h = ref.ssm_decode_step_ref(h, x[:, t], a[:, t], b[:, t], c[:, t])
+    np.testing.assert_allclose(np.asarray(state), np.asarray(h),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_ssd_decode_step_matches_prefill_continuation():
+    """prefill L tokens then decode 1 == full scan over L+1 tokens."""
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    B, L, H, G, P, N, Q = 1, 64, 2, 1, 16, 16, 32
+    x = _rand(ks[0], (B, L + 1, H, P), jnp.float32) * 0.5
+    a = -jnp.abs(_rand(ks[1], (B, L + 1, H), jnp.float32)) * 0.1
+    b = _rand(ks[2], (B, L + 1, G, N), jnp.float32) * 0.5
+    c = _rand(ks[3], (B, L + 1, G, N), jnp.float32) * 0.5
+    y_full = ref.ssd_naive(x, a, b, c)
+    _, state = ref.ssd_chunked(x[:, :L], a[:, :L], b[:, :L], c[:, :L],
+                               chunk=Q, return_final_state=True)
+    y_tok, _ = ref.ssm_decode_step_ref(state, x[:, L], a[:, L], b[:, L],
+                                       c[:, L])
+    np.testing.assert_allclose(np.asarray(y_tok), np.asarray(y_full[:, L]),
+                               atol=1e-4, rtol=1e-4)

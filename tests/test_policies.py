@@ -1,0 +1,105 @@
+"""Scheduling-policy behaviour tests (Sec. II-F)."""
+
+import pytest
+
+from repro.core.estimator import AdaptiveTokenEstimator, DriftConfig
+from repro.core.policies import make_policy
+from repro.core.queues import TenantQueueManager
+from repro.core.request import Category, Request, TenantTier
+from repro.core.admission import AdmissionController
+
+
+def _manager_with(reqs, now=0.0):
+    mgr = TenantQueueManager()
+    adm = AdmissionController(AdaptiveTokenEstimator(DriftConfig()), mgr)
+    for i, r in enumerate(reqs):
+        adm.admit(r, now + i * 0.001)
+    return mgr
+
+
+def _req(tenant=TenantTier.STANDARD, category=Category.SHORT_QA,
+         prompt="what is x?"):
+    return Request(tenant=tenant, category=category, prompt=prompt)
+
+
+def test_fifo_is_arrival_order_across_tenants():
+    reqs = [_req(TenantTier.BATCH), _req(TenantTier.PREMIUM),
+            _req(TenantTier.STANDARD), _req(TenantTier.BATCH)]
+    mgr = _manager_with(reqs)
+    pol = make_policy("fifo")
+    order = [pol.select(mgr, 1.0) for _ in range(4)]
+    assert [r.req_id for r in order] == [r.req_id for r in reqs]
+
+
+def test_priority_tiers_then_fifo_within_tier():
+    b1, p1, s1, b2, p2 = (_req(TenantTier.BATCH), _req(TenantTier.PREMIUM),
+                          _req(TenantTier.STANDARD), _req(TenantTier.BATCH),
+                          _req(TenantTier.PREMIUM))
+    mgr = _manager_with([b1, p1, s1, b2, p2])
+    pol = make_policy("priority")
+    order = [pol.select(mgr, 1.0) for _ in range(5)]
+    assert [r.req_id for r in order] == [p1.req_id, p2.req_id, s1.req_id,
+                                         b1.req_id, b2.req_id]
+
+
+def test_sjf_orders_by_estimated_budget():
+    long_r = _req(category=Category.REPORT)
+    short_r = _req(category=Category.SHORT_QA)
+    med_r = _req(category=Category.SUMMARY)
+    mgr = _manager_with([long_r, med_r, short_r])
+    pol = make_policy("sjf")
+    order = [pol.select(mgr, 1.0) for _ in range(3)]
+    assert [r.req_id for r in order] == [short_r.req_id, med_r.req_id,
+                                         long_r.req_id]
+    budgets = [r.t_budget for r in order]
+    assert budgets == sorted(budgets)
+
+
+def test_weighted_follows_ratio_when_all_queues_full():
+    reqs = ([_req(TenantTier.PREMIUM) for _ in range(10)]
+            + [_req(TenantTier.STANDARD) for _ in range(10)]
+            + [_req(TenantTier.BATCH) for _ in range(10)])
+    mgr = _manager_with(reqs)
+    pol = make_policy("weighted", ratio=(5, 3, 2))
+    picks = [pol.select(mgr, 1.0).tenant for _ in range(10)]
+    assert picks.count(TenantTier.PREMIUM) == 5
+    assert picks.count(TenantTier.STANDARD) == 3
+    assert picks.count(TenantTier.BATCH) == 2
+
+
+def test_weighted_skips_empty_classes():
+    reqs = [_req(TenantTier.BATCH) for _ in range(3)]
+    mgr = _manager_with(reqs)
+    pol = make_policy("weighted")
+    assert all(pol.select(mgr, 1.0) is not None for _ in range(3))
+    assert pol.select(mgr, 1.0) is None
+
+
+def test_aging_promotes_long_waiting_batch_request():
+    batch_r = _req(TenantTier.BATCH)
+    mgr = _manager_with([batch_r])
+    prem_r = _req(TenantTier.PREMIUM)
+    # premium arrives much later; batch has aged past 2*threshold
+    adm = AdmissionController(AdaptiveTokenEstimator(DriftConfig()), mgr)
+    adm.admit(prem_r, 1000.0)
+    pol = make_policy("aging", aging_threshold=100.0)
+    first = pol.select(mgr, 1000.0)
+    assert first.req_id == batch_r.req_id  # aged batch outranks fresh premium
+
+
+def test_aging_close_to_priority_for_fresh_queues():
+    b, p = _req(TenantTier.BATCH), _req(TenantTier.PREMIUM)
+    mgr = _manager_with([b, p])
+    pol = make_policy("aging", aging_threshold=100.0)
+    assert pol.select(mgr, 0.01).req_id == p.req_id
+
+
+def test_policies_return_none_on_empty():
+    mgr = TenantQueueManager()
+    for name in ("fifo", "priority", "sjf", "weighted", "aging"):
+        assert make_policy(name).select(mgr, 0.0) is None
+
+
+def test_unknown_policy_raises():
+    with pytest.raises(ValueError):
+        make_policy("lottery")

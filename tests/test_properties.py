@@ -1,0 +1,121 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.estimator import AdaptiveTokenEstimator, BiasStore, DriftConfig
+from repro.core.policies import make_policy
+from repro.core.queues import TenantQueueManager
+from repro.core.request import Category, JobClass, Request, TenantTier
+from repro.core.admission import AdmissionController
+from repro.distributed.fault_tolerance import elastic_plan
+from repro.serving.kv_cache import PagedAllocator
+from repro.serving.metrics import percentile
+
+CATS = list(Category)
+TIERS = list(TenantTier)
+
+
+@given(st.lists(st.floats(min_value=1.0, max_value=2000.0),
+                min_size=1, max_size=200),
+       st.floats(min_value=0.01, max_value=1.0))
+def test_ema_bias_stays_in_observed_hull(observations, alpha):
+    """EMA bias never escapes [min, max] of (clipped) observed ratios
+    union the initial value — no runaway."""
+    cfg = DriftConfig(ema_alpha=alpha)
+    store = BiasStore(cfg)
+    t_base = cfg.base_estimates[Category.SUMMARY]
+    lo, hi = cfg.bias_clip
+    ratios = [min(max(o / t_base, lo), hi) for o in observations]
+    for o in observations:
+        store.update(Category.SUMMARY, o)
+    b = store.get(Category.SUMMARY)
+    assert min(ratios + [1.0]) - 1e-9 <= b <= max(ratios + [1.0]) + 1e-9
+
+
+@given(st.floats(min_value=1.0, max_value=1e6))
+def test_classification_total_and_ordered(budget):
+    est = AdaptiveTokenEstimator(DriftConfig())
+    jc = est.classify_budget(budget)
+    assert jc in (JobClass.SHORT, JobClass.MEDIUM, JobClass.LONG)
+
+
+@given(st.integers(min_value=0, max_value=5000),
+       st.integers(min_value=0, max_value=5000))
+def test_estimate_monotone_in_prompt_tokens(a, b):
+    """Longer prompts never get smaller budgets (F_input monotone +
+    additive T_input)."""
+    est = AdaptiveTokenEstimator(DriftConfig())
+    ea = est.estimate(Category.TECHNICAL, TenantTier.STANDARD, a)
+    eb = est.estimate(Category.TECHNICAL, TenantTier.STANDARD, b)
+    if a <= b:
+        assert ea.t_budget <= eb.t_budget
+    else:
+        assert eb.t_budget <= ea.t_budget
+
+
+@settings(max_examples=50)
+@given(st.lists(st.tuples(st.sampled_from(CATS), st.sampled_from(TIERS)),
+                min_size=1, max_size=60),
+       st.sampled_from(["fifo", "priority", "sjf", "weighted", "aging"]))
+def test_policies_conserve_requests(entries, policy_name):
+    """Every admitted request is dispatched exactly once, none invented."""
+    mgr = TenantQueueManager()
+    adm = AdmissionController(AdaptiveTokenEstimator(DriftConfig()), mgr)
+    ids = set()
+    for i, (cat, tier) in enumerate(entries):
+        r = Request(tenant=tier, category=cat, prompt="p q r")
+        adm.admit(r, now=float(i))
+        ids.add(r.req_id)
+    pol = make_policy(policy_name)
+    seen = set()
+    for _ in range(len(entries)):
+        r = pol.select(mgr, now=1e6)
+        assert r is not None
+        assert r.req_id not in seen
+        seen.add(r.req_id)
+    assert seen == ids
+    assert pol.select(mgr, now=1e6) is None
+
+
+@settings(max_examples=50)
+@given(st.lists(st.tuples(st.integers(1, 300), st.integers(1, 300)),
+                min_size=1, max_size=40))
+def test_paged_allocator_conservation(seqs):
+    """Pages are never double-allocated; free+used == total always."""
+    alloc = PagedAllocator(n_pages=4096, page_size=16, pages_per_seq=64)
+    live = {}
+    for sid, (prompt, gen) in enumerate(seqs):
+        pages = alloc.alloc(sid, prompt)
+        assert len(set(pages)) == len(pages)
+        live[sid] = list(pages)
+        for _ in range(gen):
+            fresh = alloc.extend(sid, 1)
+            live[sid].extend(fresh)
+    all_pages = [p for ps in live.values() for p in ps]
+    assert len(set(all_pages)) == len(all_pages)          # no aliasing
+    assert alloc.free_pages + len(all_pages) == 4096
+    for sid in list(live):
+        alloc.free(sid)
+    assert alloc.free_pages == 4096
+
+
+@given(st.lists(st.floats(min_value=-1e6, max_value=1e6,
+                          allow_nan=False), min_size=1, max_size=300),
+       st.floats(min_value=0, max_value=100))
+def test_percentile_matches_numpy(values, p):
+    import numpy as np
+    ours = percentile(values, p)
+    theirs = float(np.percentile(np.array(values), p))
+    assert math.isclose(ours, theirs, rel_tol=1e-9, abs_tol=1e-6)
+
+
+@given(st.integers(min_value=1, max_value=4096))
+def test_elastic_plan_always_uses_most_chips(n):
+    plan = elastic_plan(n, model_parallel=16)
+    dp, tp = plan.mesh_shape
+    assert dp * tp <= n
+    assert dp * tp + plan.dropped_chips == n
+    # never wastes a full TP group
+    assert n - dp * tp < tp

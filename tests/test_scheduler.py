@@ -1,0 +1,87 @@
+"""DriftScheduler lifecycle + fault-tolerance semantics."""
+
+import pytest
+
+from repro.core.estimator import DriftConfig
+from repro.core.request import Category, Request, RequestState, TenantTier
+from repro.core.scheduler import DriftScheduler
+
+
+def _req(category=Category.SUMMARY, tenant=TenantTier.STANDARD):
+    return Request(tenant=tenant, category=category,
+                   prompt="summarize the design of X for a new engineer")
+
+
+def test_lifecycle_timestamps():
+    s = DriftScheduler("fifo")
+    r = s.submit(_req(), now=1.0)
+    assert r.state is RequestState.QUEUED and r.arrival_time == 1.0
+    d = s.dispatch(now=2.5)
+    assert d is r and r.dispatch_time == 2.5
+    sample = s.complete(r, observed_tokens=111, now=9.0)
+    assert r.state is RequestState.COMPLETED
+    assert r.e2e_latency == pytest.approx(8.0)
+    assert r.queue_wait == pytest.approx(1.5)
+    assert sample.observed_output == 111.0
+
+
+def test_complete_feeds_bias_exactly_once():
+    s = DriftScheduler("fifo")
+    r = s.submit(_req(), now=0.0)
+    s.dispatch(now=0.0)
+    n0 = s.bias_store.update_counts()["summary"]
+    s.complete(r, 100, now=1.0)
+    assert s.bias_store.update_counts()["summary"] == n0 + 1
+
+
+def test_fail_requeues_at_head_without_feedback():
+    s = DriftScheduler("fifo")
+    r1 = s.submit(_req(), now=0.0)
+    r2 = s.submit(_req(), now=0.1)
+    d1 = s.dispatch(now=0.2)
+    assert d1 is r1
+    counts_before = s.bias_store.update_counts()
+    s.fail(d1, now=0.5)                      # worker died mid-batch
+    assert s.bias_store.update_counts() == counts_before  # no feedback
+    assert d1.retries == 1
+    nxt = s.dispatch(now=0.6)
+    assert nxt is r1                          # head-of-queue re-admission
+    assert nxt.estimate is not None           # original estimate preserved
+
+
+def test_dispatch_batch_respects_capacity():
+    s = DriftScheduler("fifo")
+    for i in range(10):
+        s.submit(_req(), now=float(i))
+    batch = s.dispatch_batch(now=20.0, max_n=4)
+    assert len(batch) == 4
+    assert s.queue_depth() == 6
+
+
+def test_checkpoint_roundtrip_preserves_bias_and_cursor():
+    s = DriftScheduler("weighted")
+    for i in range(6):
+        r = s.submit(_req(), now=float(i))
+        s.dispatch(now=float(i))
+        s.complete(r, 50 + i, now=float(i) + 1)
+    state = s.state_dict()
+
+    s2 = DriftScheduler("weighted")
+    s2.load_state_dict(state)
+    assert s2.bias_store.snapshot() == s.bias_store.snapshot()
+    assert s2.policy.state_dict() == s.policy.state_dict()
+    assert s2.dispatched == s.dispatched
+
+
+def test_checkpoint_policy_mismatch_raises():
+    s = DriftScheduler("fifo")
+    with pytest.raises(ValueError):
+        s.load_state_dict({"policy": "sjf"})
+
+
+def test_prompt_tokens_counted_when_missing():
+    s = DriftScheduler("fifo")
+    r = Request(tenant=TenantTier.BATCH, category=Category.SHORT_QA,
+                prompt="what is a b-tree index")
+    s.submit(r, now=0.0)
+    assert r.prompt_tokens == 5

@@ -1,0 +1,147 @@
+"""Cluster-simulator behaviour: paper protocol, policy orderings,
+fault tolerance, straggler mitigation."""
+
+import pytest
+
+from repro.core.estimator import DriftConfig
+from repro.core.scheduler import DriftScheduler
+from repro.core.drift import error_reduction
+from repro.serving.simulator import ClusterSimulator, SimConfig
+from repro.workload.generator import GeneratorConfig, WorkloadGenerator
+
+# small runs keep the suite fast; the full 3000-request protocol runs in
+# benchmarks/
+SMALL = GeneratorConfig(total_requests=400, calibration_requests=130, seed=7)
+
+
+def _run(policy="fifo", bias=True, sim_cfg=None, gen_cfg=SMALL, seed=7):
+    plan = WorkloadGenerator(gen_cfg).plan(seed=seed)
+    sched = DriftScheduler(policy=policy,
+                           config=DriftConfig(bias_enabled=bias))
+    sim = ClusterSimulator(sched, plan, sim_cfg or SimConfig(seed=seed))
+    metrics = sim.run()
+    return sched, sim, metrics
+
+
+def test_all_requests_complete():
+    sched, sim, m = _run()
+    assert m.n_completed == 400
+    assert m.makespan > 0
+    assert all(r.completion_time is not None for r in sched.completed)
+
+
+def test_two_phase_protocol():
+    """Stress burst is released only after calibration drains."""
+    sched, sim, m = _run()
+    assert sim.phase_boundary > 0
+    cal_completions = [r.completion_time for r in sched.completed[:130]]
+    # the 130 calibration requests all complete before the boundary
+    assert max(cal_completions) <= sim.phase_boundary + 1e-9
+
+
+def test_sjf_beats_fifo_on_wait_and_p50():
+    _, _, fifo = _run("fifo")
+    _, _, sjf = _run("sjf")
+    assert sjf.queue_wait.mean < 0.8 * fifo.queue_wait.mean
+    assert sjf.e2e.p50 < 0.7 * fifo.e2e.p50
+
+
+def test_priority_protects_premium():
+    _, _, m = _run("priority")
+    prem = m.per_tenant["premium"]["latency"]["mean"]
+    batch = m.per_tenant["batch"]["latency"]["mean"]
+    assert prem < 0.5 * batch
+
+
+def test_sjf_orders_waits_by_class():
+    _, _, m = _run("sjf")
+    w = m.per_class_wait
+    assert w["short"] < w["medium"] < w["long"]
+
+
+def test_gpu_utilization_saturated():
+    _, _, m = _run()
+    assert m.gpu_utilization > 0.8
+
+
+def test_drift_compensation_reduces_error():
+    s_on, _, _ = _run("fifo", bias=True)
+    s_off, _, _ = _run("fifo", bias=False)
+    red = error_reduction(s_off.drift.stats(), s_on.drift.stats())
+    assert red["mae_reduction_pct"] > 15.0
+    assert red["rmse_reduction_pct"] > 15.0
+
+
+def test_bias_converges_into_band():
+    sched, _, _ = _run("fifo", bias=True)
+    for cat, b in sched.bias_store.snapshot().items():
+        assert 0.70 <= b <= 0.92, (cat, b)
+
+
+def test_worker_failure_requeues_and_completes():
+    cfg = SimConfig(seed=7, fail_times=(15.0, 90.0), repair_time=20.0)
+    sched, sim, m = _run(sim_cfg=cfg)
+    assert m.n_completed == 400                 # nothing lost
+    assert m.n_failed_dispatches > 0            # failures actually hit
+    retried = [r for r in sched.completed if r.retries > 0]
+    assert retried                               # and were retried
+    # at-most-once feedback: updates == completions
+    assert sum(sched.bias_store.update_counts().values()) == 400
+
+
+def test_failure_does_not_double_feed_bias():
+    cfg = SimConfig(seed=7, fail_times=(15.0,), repair_time=5.0)
+    sched, _, _ = _run(sim_cfg=cfg)
+    assert sum(sched.bias_store.update_counts().values()) == len(sched.completed)
+
+
+def test_multi_worker_scales_throughput():
+    _, _, one = _run(sim_cfg=SimConfig(seed=7, n_workers=1))
+    _, _, four = _run(sim_cfg=SimConfig(seed=7, n_workers=4))
+    assert four.makespan < 0.5 * one.makespan
+
+
+def test_straggler_mitigation_helps():
+    slow = SimConfig(seed=7, n_workers=2, straggler_worker=1,
+                     straggler_after=5.0, straggler_factor=8.0)
+    mit = SimConfig(seed=7, n_workers=2, straggler_worker=1,
+                    straggler_after=5.0, straggler_factor=8.0,
+                    mitigate_stragglers=True)
+    _, sim_a, a = _run(sim_cfg=slow)
+    _, sim_b, b = _run(sim_cfg=mit)
+    assert sim_b.stragglers.stragglers() == [1]
+    assert b.e2e.p99 < a.e2e.p99
+
+
+def test_telemetry_sampled():
+    _, sim, m = _run()
+    assert len(sim.telemetry) > 100
+    busy = [t for t in sim.telemetry if t.gpu_util > 0.5]
+    assert busy
+    assert all(13.5 < t.gpu_mem_gb < 15.5 for t in busy)
+
+
+def test_determinism():
+    _, _, a = _run(seed=11)
+    _, _, b = _run(seed=11)
+    assert a.e2e.p99 == b.e2e.p99
+    assert a.queue_wait.mean == b.queue_wait.mean
+
+
+def test_hedged_dispatch_rescues_straggling_batches():
+    """Batch-level speculative re-execution: a slowed worker's overdue
+    batches re-run on idle workers; first completion wins, nothing is
+    completed twice, and tail latency improves."""
+    base = SimConfig(seed=7, n_workers=3, straggler_worker=2,
+                     straggler_after=5.0, straggler_factor=10.0)
+    hedged = SimConfig(seed=7, n_workers=3, straggler_worker=2,
+                       straggler_after=5.0, straggler_factor=10.0,
+                       hedge=True, hedge_factor=2.0)
+    sched_a, sim_a, a = _run(sim_cfg=base)
+    sched_b, sim_b, b = _run(sim_cfg=hedged)
+    assert sim_b.n_hedges > 0
+    assert sim_b.n_hedge_wins > 0
+    assert b.n_completed == 400
+    # exactly-once completion feedback despite duplicate execution
+    assert sum(sched_b.bias_store.update_counts().values()) == 400
+    assert b.e2e.p99 < a.e2e.p99

@@ -1,0 +1,72 @@
+"""Workload corpus + generator (Sec. II-B, IV-C)."""
+
+import random
+
+from repro.core.request import Category, TenantTier
+from repro.workload.corpus import build_corpus
+from repro.workload.generator import GeneratorConfig, WorkloadGenerator
+
+
+def test_corpus_size_and_uniqueness():
+    corpus = build_corpus()
+    texts = [p.text for p in corpus.prompts]
+    assert len(texts) == len(set(texts))
+    assert 1100 <= len(texts) <= 1200            # paper: ~1180 unique
+    for cat in Category:
+        assert len(corpus.by_category[cat]) > 50
+
+
+def test_corpus_deterministic():
+    a = build_corpus()
+    b = build_corpus()
+    assert [p.text for p in a.prompts] == [p.text for p in b.prompts]
+    assert [p.latent_verbosity for p in a.prompts] == \
+        [p.latent_verbosity for p in b.prompts]
+
+
+def test_output_sampling_bounded_and_seeded():
+    corpus = build_corpus()
+    spec = corpus.by_category[Category.REPORT][0]
+    r1 = spec.sample_output(random.Random(1), max_tokens=512)
+    r2 = spec.sample_output(random.Random(1), max_tokens=512)
+    assert r1 == r2
+    assert 1 <= r1 <= 512
+
+
+def test_plan_structure_and_mix():
+    cfg = GeneratorConfig(seed=3)
+    gen = WorkloadGenerator(cfg)
+    plan = gen.plan()
+    assert len(plan.calibration) == 1000
+    assert len(plan.stress) == 2000
+    hist = gen.category_histogram(plan)
+    # weighted mix ~ 35/25/25/15 within sampling noise
+    assert 0.30 < hist["short_qa"] / 3000 < 0.40
+    assert 0.10 < hist["report"] / 3000 < 0.20
+    tenants = [r.tenant for _, r in plan]
+    for t in TenantTier:
+        assert tenants.count(t) > 500
+
+
+def test_plan_deterministic_per_seed():
+    gen = WorkloadGenerator(GeneratorConfig())
+    p1, p2 = gen.plan(seed=5), gen.plan(seed=5)
+    assert [(t, r.prompt, r.true_output_tokens) for t, r in p1] == \
+        [(t, r.prompt, r.true_output_tokens) for t, r in p2]
+    p3 = gen.plan(seed=6)
+    assert [r.prompt for _, r in p1] != [r.prompt for _, r in p3]
+
+
+def test_ground_truth_hidden_from_estimates():
+    """Drift exists: static estimates over-predict observed outputs."""
+    gen = WorkloadGenerator(GeneratorConfig(seed=0))
+    plan = gen.plan()
+    from repro.core.estimator import AdaptiveTokenEstimator, DriftConfig
+    est = AdaptiveTokenEstimator(DriftConfig(bias_enabled=False))
+    over = 0
+    reqs = [r for _, r in plan]
+    for r in reqs:
+        e = est.estimate(r.category, r.tenant, r.prompt_tokens)
+        if e.est_output_tokens > r.true_output_tokens:
+            over += 1
+    assert over / len(reqs) > 0.7    # systematic over-estimation
