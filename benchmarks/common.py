@@ -17,7 +17,7 @@ from repro.core.estimator import DriftConfig
 from repro.core.scheduler import DriftScheduler
 from repro.serving.cost_model import L4_QWEN_1_8B
 from repro.serving.metrics import RunMetrics
-from repro.serving.simulator import ClusterSimulator, SimConfig
+from repro.serving.simulator import SimConfig, WorkerSimulator
 from repro.workload.generator import GeneratorConfig, WorkloadGenerator
 
 POLICIES = ("fifo", "priority", "weighted", "sjf", "aging")
@@ -32,7 +32,7 @@ def run_experiment(policy: str, *, bias: bool = True, seed: int = 1,
                    sim_config: Optional[SimConfig] = None,
                    total_requests: int = 3000,
                    cost_model=None,
-                   ) -> Tuple[DriftScheduler, ClusterSimulator, RunMetrics]:
+                   ) -> Tuple[DriftScheduler, WorkerSimulator, RunMetrics]:
     """One full paper-protocol run (memoised per process)."""
     key = (policy, bias, seed, total_requests,
            id(sim_config) if sim_config is not None else None,
@@ -46,7 +46,7 @@ def run_experiment(policy: str, *, bias: bool = True, seed: int = 1,
     plan = gen.plan(seed=seed)
     sched = DriftScheduler(policy=policy,
                            config=DriftConfig(bias_enabled=bias))
-    sim = ClusterSimulator(sched, plan, sim_config or SimConfig(seed=seed),
+    sim = WorkerSimulator(sched, plan, sim_config or SimConfig(seed=seed),
                            cost_model=cost_model or L4_QWEN_1_8B)
     metrics = sim.run()
     _cache[key] = (sched, sim, metrics)

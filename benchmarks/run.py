@@ -1,19 +1,25 @@
 """Benchmark harness entry point: one module per paper table/figure
-plus the beyond-paper fault-tolerance suite and the roofline summary.
+plus the beyond-paper fault-tolerance and cluster-routing suites and
+the roofline summary.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--json PATH]
+
+``--json PATH`` additionally writes every executed benchmark's raw
+result dict (plus wall time and failure status) to one machine-readable
+JSON file, so per-PR perf trajectories can be captured in CI.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
-from . import (bench_bias_convergence, bench_drift_error,
-               bench_fault_tolerance, bench_gpu_exec_latency,
-               bench_queue_dynamics, bench_roofline,
-               bench_semantic_runtime, bench_tail_latency,
+from . import (bench_bias_convergence, bench_cluster_routing,
+               bench_drift_error, bench_fault_tolerance,
+               bench_gpu_exec_latency, bench_queue_dynamics,
+               bench_roofline, bench_semantic_runtime, bench_tail_latency,
                bench_tenant_qos, bench_wait_by_class)
 
 BENCHES = [
@@ -26,6 +32,7 @@ BENCHES = [
     ("queue_dynamics (Fig 6)", bench_queue_dynamics),
     ("gpu_exec_latency (Fig 9)", bench_gpu_exec_latency),
     ("fault_tolerance (beyond-paper)", bench_fault_tolerance),
+    ("cluster_routing (beyond-paper)", bench_cluster_routing),
     ("roofline (deliverable g)", bench_roofline),
 ]
 
@@ -34,9 +41,13 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     help="substring filter on benchmark name")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write all executed benchmark results to PATH "
+                         "as machine-readable JSON")
     args = ap.parse_args(argv)
 
     failures = 0
+    results = {}
     for name, mod in BENCHES:
         if args.only and args.only not in name:
             continue
@@ -45,12 +56,20 @@ def main(argv=None) -> int:
         try:
             out = mod.run()
             print(mod.report(out))
-            print(f"[done in {time.time() - t0:.1f}s]")
+            dt = time.time() - t0
+            print(f"[done in {dt:.1f}s]")
+            results[name] = {"ok": True, "wall_s": dt, "result": out}
         except Exception as e:  # keep the harness going
             failures += 1
             import traceback
             print(f"[FAILED] {type(e).__name__}: {e}")
             traceback.print_exc()
+            results[name] = {"ok": False, "wall_s": time.time() - t0,
+                             "error": f"{type(e).__name__}: {e}"}
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+        print(f"\n[json results -> {args.json}]")
     return 1 if failures else 0
 
 

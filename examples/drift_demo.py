@@ -10,7 +10,7 @@ import argparse
 from repro.core.drift import error_reduction
 from repro.core.estimator import DriftConfig
 from repro.core.scheduler import DriftScheduler
-from repro.serving.simulator import ClusterSimulator, SimConfig
+from repro.serving.simulator import SimConfig, WorkerSimulator
 from repro.workload.generator import GeneratorConfig, WorkloadGenerator
 
 
@@ -18,7 +18,7 @@ def run(policy: str, bias: bool, seed: int = 1):
     plan = WorkloadGenerator(GeneratorConfig(seed=seed)).plan(seed=seed)
     sched = DriftScheduler(policy=policy,
                            config=DriftConfig(bias_enabled=bias))
-    sim = ClusterSimulator(sched, plan, SimConfig(seed=seed))
+    sim = WorkerSimulator(sched, plan, SimConfig(seed=seed))
     metrics = sim.run()
     return sched, sim, metrics
 

@@ -1,0 +1,46 @@
+"""Cluster serving layer: many replicas behind one calibrated front end.
+
+The paper validates DriftSched on a single worker; this package scales
+the same state machine out to N replicas without changing it:
+
+* :mod:`replica`    — the execution-agnostic replica surface (state,
+  estimated-token mass, worker signals) routing and scaling reason over;
+* :mod:`router`     — ``ClusterRouter`` with four pluggable policies
+  (``round_robin`` / ``least_loaded`` / ``drift_aware`` /
+  ``tenant_affinity``), all priced by the *shared*
+  ``AdaptiveTokenEstimator``;
+* :mod:`admission`  — ``GlobalAdmission``: per-tenant token-bucket rate
+  limits in estimated budget tokens, cluster-depth backpressure, and
+  per-tier shed accounting;
+* :mod:`autoscaler` — utilization + queue-mass elastic scaling with
+  hysteresis, cooldowns, and cold-start delays;
+* :mod:`simulator`  — ``ClusterSimulator``: N per-replica
+  ``WorkerSimulator`` instances composed under one event heap and one
+  seed, with replica-failure rerouting;
+* :mod:`driver`     — the same router/admission front end over real
+  ``ServingEngine`` instances (oracle-EOS caveat applies, see the
+  module docstring);
+* :mod:`metrics`    — cluster-level aggregation (RunMetrics + shed
+  rates, per-replica utilization, scale events).
+"""
+
+from .admission import (AdmissionConfig, GlobalAdmission, TokenBucket,
+                        SHED_BACKPRESSURE, SHED_NO_REPLICA, SHED_RATE_LIMIT)
+from .autoscaler import Autoscaler, AutoscalerConfig, ScaleEvent
+from .metrics import ClusterMetrics, ReplicaStats, summarize_cluster
+from .replica import Replica, ReplicaState
+from .router import (ClusterRouter, DriftAwareRouting, LeastLoadedRouting,
+                     ROUTING_POLICIES, RoundRobinRouting, RoutingPolicy,
+                     TenantAffinityRouting, make_routing_policy)
+from .simulator import ClusterConfig, ClusterSimulator, SimReplica
+
+__all__ = [
+    "AdmissionConfig", "Autoscaler", "AutoscalerConfig", "ClusterConfig",
+    "ClusterMetrics", "ClusterRouter", "ClusterSimulator",
+    "DriftAwareRouting", "GlobalAdmission", "LeastLoadedRouting",
+    "ROUTING_POLICIES", "Replica", "ReplicaState", "ReplicaStats",
+    "RoundRobinRouting", "RoutingPolicy", "SHED_BACKPRESSURE",
+    "SHED_NO_REPLICA", "SHED_RATE_LIMIT", "ScaleEvent", "SimReplica",
+    "TenantAffinityRouting", "TokenBucket", "make_routing_policy",
+    "summarize_cluster",
+]

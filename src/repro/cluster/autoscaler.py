@@ -1,0 +1,104 @@
+"""Elastic autoscaling from utilization + queue-mass signals.
+
+The autoscaler watches two cluster signals at every control tick:
+
+* **queue mass per active replica** — outstanding estimated-token mass
+  (Eq. 1 budgets) divided by the active replica count; the demand
+  signal. Token mass, not request count: ten queued reports are a very
+  different backlog than ten short QAs, and the calibrated estimator is
+  what makes the distinction trustworthy.
+* **worker utilization** — busy workers / alive workers; the supply
+  signal for scale-down.
+
+Decisions use hysteresis (disjoint up/down thresholds) plus a cooldown
+after *any* action, so a burst cannot flap the pool. The autoscaler
+only *decides*; the owner (cluster simulator or driver) provisions the
+replica (with a cold-start delay) or marks one draining.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+from .replica import Replica, ReplicaState
+
+SCALE_UP = "up"
+SCALE_DOWN = "down"
+
+
+@dataclass(frozen=True)
+class AutoscalerConfig:
+    min_replicas: int = 1
+    max_replicas: int = 8
+    # scale up when queue mass per active replica exceeds this
+    up_queue_mass_per_replica: float = 20_000.0
+    # scale down only when BOTH hold (hysteresis band)
+    down_queue_mass_per_replica: float = 2_000.0
+    down_utilization: float = 0.5
+    cooldown: float = 20.0           # s between scaling actions
+    startup_delay: float = 5.0       # cold start before a replica serves
+
+
+@dataclass
+class ScaleEvent:
+    time: float
+    action: str                      # "up" | "down"
+    n_active: int                    # active count when decided
+    queue_mass_per_replica: float
+    utilization: float
+
+
+class Autoscaler:
+    """Hysteresis + cooldown scaling decisions over the replica pool."""
+
+    def __init__(self, config: Optional[AutoscalerConfig] = None) -> None:
+        self.cfg = config or AutoscalerConfig()
+        self.events: List[ScaleEvent] = []
+        self._last_action_time = -float("inf")
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def signals(replicas: Sequence[Replica]) -> tuple:
+        """(queue_mass_per_active_replica, utilization, n_active)."""
+        active = [r for r in replicas if r.state is ReplicaState.ACTIVE]
+        if not active:
+            return 0.0, 0.0, 0
+        mass = sum(r.token_mass() for r in active) / len(active)
+        busy = sum(r.busy_workers() for r in active)
+        alive = sum(r.alive_workers() for r in active)
+        util = busy / alive if alive else 0.0
+        return mass, util, len(active)
+
+    def decide(self, now: float, replicas: Sequence[Replica],
+               n_starting: int = 0) -> Optional[str]:
+        """Return SCALE_UP, SCALE_DOWN, or None. ``n_starting`` counts
+        replicas already provisioning (they count toward max and damp
+        repeated scale-ups during their cold start)."""
+        cfg = self.cfg
+        if now - self._last_action_time < cfg.cooldown:
+            return None
+        mass, util, n_active = self.signals(replicas)
+        if n_active == 0:
+            return None
+        pool = n_active + n_starting
+        action: Optional[str] = None
+        if mass > cfg.up_queue_mass_per_replica and pool < cfg.max_replicas:
+            action = SCALE_UP
+        elif (mass < cfg.down_queue_mass_per_replica
+              and util < cfg.down_utilization
+              and n_active > cfg.min_replicas and n_starting == 0):
+            action = SCALE_DOWN
+        if action is not None:
+            self._last_action_time = now
+            self.events.append(ScaleEvent(
+                time=now, action=action, n_active=n_active,
+                queue_mass_per_replica=mass, utilization=util))
+        return action
+
+    def pick_drain_target(self, replicas: Sequence[Replica]) -> Optional[Replica]:
+        """Least-loaded active replica drains first (cheapest to empty)."""
+        active = [r for r in replicas if r.state is ReplicaState.ACTIVE]
+        if len(active) <= self.cfg.min_replicas:
+            return None
+        return min(active, key=lambda r: (r.token_mass(), -r.rid))

@@ -1,0 +1,140 @@
+"""Thin cluster driver over real :class:`ServingEngine` instances.
+
+The same :class:`ClusterRouter` / :class:`GlobalAdmission` front end
+that drives the discrete-event cluster simulator, run over N live JAX
+continuous-batching engines — the execution-agnostic contract
+:class:`DriftScheduler` already honors, lifted one level up. Each
+engine owns its own scheduler; all schedulers share one
+:class:`AdaptiveTokenEstimator`, so drift feedback from any replica
+calibrates routing and admission for the whole cluster.
+
+Oracle-EOS caveat (see ``serving/engine.py``): with randomly
+initialised smoke models the engines stop each request at its
+ground-truth output length rather than a semantic EOS token. Cluster
+runs inherit this — observed lengths (and therefore the drift feedback
+that routing quality depends on) are the planted ground truth, not
+model behaviour. A real deployment swaps in token-id EOS detection per
+engine; nothing at the cluster layer changes.
+
+Stepping model: engines advance in lockstep rounds (every engine steps
+once per simulated ``dt``). There is no cross-engine batching — a
+request lives on exactly one replica, as in the simulator.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from ..core.estimator import AdaptiveTokenEstimator, DriftConfig
+from ..core.request import Request
+from ..core.scheduler import DriftScheduler
+from ..serving.engine import EngineConfig, ServingEngine
+from ..serving.metrics import RunMetrics, summarize_run
+from .admission import GlobalAdmission
+from .replica import Replica
+from .router import ClusterRouter, RoutingPolicy
+
+
+class EngineReplica(Replica):
+    """Replica backed by a live ServingEngine."""
+
+    def __init__(self, rid: int, engine: ServingEngine) -> None:
+        super().__init__(rid, engine.sched)
+        self.engine = engine
+
+    def inflight_requests(self) -> List[Request]:
+        return [s.req for s in self.engine.slots if s.req is not None]
+
+    def busy_workers(self) -> int:
+        return 1 if self.engine.active_slots() else 0
+
+    def is_idle(self) -> bool:
+        return self.queue_depth() == 0 and not self.engine.active_slots()
+
+
+class EngineClusterDriver:
+    """Route + admit over N live engines, step them in lockstep."""
+
+    def __init__(self, engines: Sequence[ServingEngine],
+                 routing: str | RoutingPolicy = "drift_aware",
+                 admission: Optional[GlobalAdmission] = None) -> None:
+        if not engines:
+            raise ValueError("need at least one engine")
+        stores = {id(e.sched.estimator.bias_store) for e in engines}
+        if len(stores) != 1:
+            raise ValueError(
+                "cluster engines must share one AdaptiveTokenEstimator "
+                "(build schedulers with DriftScheduler(estimator=shared)); "
+                f"got {len(stores)} distinct bias stores")
+        self.replicas = [EngineReplica(i, e) for i, e in enumerate(engines)]
+        self.estimator = engines[0].sched.estimator
+        self.router = ClusterRouter(routing, self.estimator)
+        self.admission = admission
+        self.n_shed = 0
+        self._last_submit = 0.0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request, now: float) -> bool:
+        """Front door: returns False when the request was shed."""
+        self._last_submit = max(self._last_submit, now)
+        est = self.router.price(req)
+        if self.admission is not None:
+            mass = sum(r.token_mass() for r in self.replicas)
+            ok, _ = self.admission.offer(req, est, now, mass)
+            if not ok:
+                self.n_shed += 1
+                return False
+        target = self.router.route(self.replicas, req, now, est_budget=est)
+        if target is None:
+            if self.admission is not None:
+                self.admission.shed_no_replica(req, est, now)
+            self.n_shed += 1
+            return False
+        target.sched.submit(req, now)
+        return True
+
+    def step(self, now: float) -> int:
+        """One lockstep round across all replicas; returns completions."""
+        return sum(rep.engine.step(now) for rep in self.replicas
+                   if rep.routable())
+
+    def run_until_drained(self, *, max_steps: int = 100_000,
+                          dt: float = 1.0) -> RunMetrics:
+        # start the clock at the latest submit time so completion
+        # timestamps never precede arrivals (negative e2e latencies)
+        now = self._last_submit
+        for _ in range(max_steps):
+            if all(rep.is_idle() for rep in self.replicas):
+                break
+            self.step(now)
+            now += dt
+        completed: List[Request] = []
+        busy = 0.0
+        for rep in self.replicas:
+            completed.extend(rep.sched.completed)
+            busy += float(rep.engine.busy_steps) * dt
+        completed.sort(key=lambda r: (r.completion_time, r.req_id))
+        return summarize_run(
+            self.replicas[0].sched.policy.name,
+            self.estimator.config.bias_enabled,
+            completed, busy_time=busy / len(self.replicas))
+
+
+def make_engine_cluster(model_cfg, params, n_replicas: int, *,
+                        policy: str = "fifo",
+                        routing: str | RoutingPolicy = "drift_aware",
+                        engine_config: Optional[EngineConfig] = None,
+                        drift_config: Optional[DriftConfig] = None,
+                        admission: Optional[GlobalAdmission] = None,
+                        ) -> EngineClusterDriver:
+    """Convenience constructor: N engines over one model's params (the
+    common deployment — replicas are copies of the same model), all
+    schedulers sharing one estimator."""
+    estimator = AdaptiveTokenEstimator(drift_config or DriftConfig())
+    engines = [
+        ServingEngine(model_cfg, params,
+                      DriftScheduler(policy=policy, estimator=estimator),
+                      engine_config)
+        for _ in range(n_replicas)
+    ]
+    return EngineClusterDriver(engines, routing=routing, admission=admission)

@@ -1,0 +1,103 @@
+"""Cluster-level metrics: per-run aggregation across N replicas.
+
+Wraps the single-run :func:`repro.serving.metrics.summarize_run` (same
+latency/fairness definitions, so cluster numbers are directly
+comparable with the paper tables) and adds the cluster-only dimensions:
+shed accounting per tier, per-replica utilization and routing share,
+and the autoscaler's action trail.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from ..core.request import Request
+from ..serving.metrics import RunMetrics, summarize_run
+from .admission import GlobalAdmission
+from .autoscaler import Autoscaler
+
+
+@dataclass
+class ReplicaStats:
+    rid: int
+    state: str
+    n_routed: int
+    n_completed: int
+    busy_time: float
+    utilization: float               # busy_time / makespan
+
+    def as_dict(self) -> dict:
+        return {"rid": self.rid, "state": self.state,
+                "n_routed": self.n_routed, "n_completed": self.n_completed,
+                "busy_time": self.busy_time, "utilization": self.utilization}
+
+
+@dataclass
+class ClusterMetrics:
+    """One cluster run: the familiar RunMetrics plus cluster extras."""
+
+    routing: str
+    n_replicas_start: int
+    n_replicas_end: int
+    run: RunMetrics
+    shed: dict                       # GlobalAdmission.summary()
+    replicas: List[ReplicaStats]
+    scale_events: List[dict]
+    n_rerouted: int
+
+    @property
+    def shed_rate(self) -> float:
+        return self.shed.get("shed_rate", 0.0)
+
+    def as_dict(self) -> dict:
+        return {
+            "routing": self.routing,
+            "n_replicas_start": self.n_replicas_start,
+            "n_replicas_end": self.n_replicas_end,
+            "run": self.run.as_dict(),
+            "shed": self.shed,
+            "replicas": [r.as_dict() for r in self.replicas],
+            "scale_events": self.scale_events,
+            "n_rerouted": self.n_rerouted,
+        }
+
+
+def summarize_cluster(routing: str, policy: str, bias_enabled: bool,
+                      completed: Sequence[Request], *,
+                      replicas, admission: Optional[GlobalAdmission],
+                      autoscaler: Optional[Autoscaler],
+                      n_replicas_start: int,
+                      replica_busy_time: Dict[int, float],
+                      replica_completed: Dict[int, int],
+                      n_failed_dispatches: int = 0,
+                      n_rerouted: int = 0) -> ClusterMetrics:
+    run = summarize_run(policy, bias_enabled, completed,
+                        busy_time=(sum(replica_busy_time.values())
+                                   / max(len(replica_busy_time), 1)),
+                        n_failed_dispatches=n_failed_dispatches)
+    makespan = max(run.makespan, 1e-9)
+    stats = [
+        ReplicaStats(
+            rid=r.rid, state=r.state.value, n_routed=r.n_routed,
+            n_completed=replica_completed.get(r.rid, 0),
+            busy_time=replica_busy_time.get(r.rid, 0.0),
+            utilization=replica_busy_time.get(r.rid, 0.0) / makespan)
+        for r in replicas
+    ]
+    from .replica import ReplicaState
+    n_end = sum(1 for r in replicas
+                if r.state in (ReplicaState.ACTIVE, ReplicaState.STARTING))
+    return ClusterMetrics(
+        routing=routing,
+        n_replicas_start=n_replicas_start,
+        n_replicas_end=n_end,
+        run=run,
+        shed=admission.summary() if admission is not None else {
+            "accepted": {}, "shed": {}, "shed_rate": 0.0,
+            "shed_rate_per_tier": {}},
+        replicas=stats,
+        scale_events=[vars(e).copy() for e in
+                      (autoscaler.events if autoscaler else [])],
+        n_rerouted=n_rerouted,
+    )

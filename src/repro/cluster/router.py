@@ -1,0 +1,245 @@
+"""Cluster router: which replica serves which request.
+
+Four pluggable routing policies over the :class:`Replica` introspection
+surface:
+
+* ``round_robin``     — cycle over routable replicas, load-blind.
+* ``least_loaded``    — smallest outstanding estimated-token mass
+  (queued + in-flight, Eq. 1 budgets).
+* ``drift_aware``     — size-band packing from the calibrated budget
+  distribution: each replica owns a contiguous band of the service-
+  weighted size distribution, so heavy and light jobs land on different
+  replicas and batches stay homogeneous. Batch execution walks to its
+  longest member (cost model ``c_decode_max``), so homogeneous batches
+  shorten every batch — the cluster-level analogue of SJF's win, and it
+  sharpens as the shared estimator's drift compensation converges. A
+  load-aware spill keeps the policy work-conserving.
+* ``tenant_affinity`` — keeps a tenant's stream on its warm replica
+  (stable tenant -> replica mapping), spilling to the least-loaded
+  replica when the warm one is overloaded.
+
+Selection is deterministic: replicas are scanned in ``rid`` order and
+ties break toward the lowest ``rid``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+from ..core.admission import count_tokens
+from ..core.estimator import AdaptiveTokenEstimator
+from ..core.request import Request
+from .replica import Replica, _budget
+
+
+class RoutingPolicy:
+    """Base class. Subclasses override :meth:`select`."""
+
+    name: str = "base"
+
+    def select(self, replicas: Sequence[Replica], req: Request,
+               est_budget: float, now: float) -> Replica:
+        raise NotImplementedError
+
+
+class RoundRobinRouting(RoutingPolicy):
+    """Cycle over routable replicas (membership-change tolerant: the
+    cursor indexes the current routable list, not absolute rids)."""
+
+    name = "round_robin"
+
+    def __init__(self) -> None:
+        self._cursor = 0
+
+    def select(self, replicas, req, est_budget, now):
+        chosen = replicas[self._cursor % len(replicas)]
+        self._cursor = (self._cursor + 1) % max(len(replicas), 1)
+        return chosen
+
+
+class LeastLoadedRouting(RoutingPolicy):
+    """Smallest outstanding estimated-token mass wins."""
+
+    name = "least_loaded"
+
+    def select(self, replicas, req, est_budget, now):
+        return min(replicas, key=lambda r: (r.token_mass(), r.rid))
+
+
+class DriftAwareRouting(RoutingPolicy):
+    """Service-weighted size-band packing with load-aware spill.
+
+    Two calibrated signals, both in estimated-token units (Eq. 1):
+
+    1. **Band placement.** The router maintains an online histogram of
+       *service weight* — ``overhead_tokens + est_budget``, the token-
+       equivalent cost of one request including its per-request batch
+       overhead share — over log-spaced size buckets. A request's
+       position in the service-weighted CDF maps it onto the replica
+       ring: replica 0 serves the lightest band, replica n-1 the
+       heaviest, and each band carries an (approximately) equal share
+       of predicted service time. Homogeneous bands mean homogeneous
+       batches, which cuts the walk-to-longest-member cost every batch
+       pays under continuous batching.
+    2. **Spill.** Band placement alone is open-loop; arrival noise can
+       pile one band up while another drains. When the preferred
+       replica's outstanding service load exceeds ``spill_factor`` x
+       the minimum load plus ``spill_slack``, the request spills to
+       the least-loaded replica instead — work-conserving by
+       construction.
+
+    Both signals improve as the shared estimator's bias converges: the
+    CDF sharpens and the load measure tracks true occupancy. Defaults
+    are calibrated for the L4 cost models (``overhead_tokens`` ~
+    ``t_base / c_decode_max``).
+    """
+
+    name = "drift_aware"
+
+    #: histogram domain: log2-spaced buckets over [16, 4096] est tokens
+    _LOG_LO, _LOG_HI = 4.0, 12.0
+
+    def __init__(self, overhead_tokens: float = 70.0,
+                 spill_factor: float = 1.5,
+                 spill_slack: float = 4000.0,
+                 n_buckets: int = 64) -> None:
+        self.overhead_tokens = float(overhead_tokens)
+        self.spill_factor = float(spill_factor)
+        self.spill_slack = float(spill_slack)
+        self.n_buckets = int(n_buckets)
+        self._weight = [0.0] * self.n_buckets
+
+    def _bucket(self, est: float) -> int:
+        x = max(est, 2.0 ** self._LOG_LO)
+        frac = (math.log2(x) - self._LOG_LO) / (self._LOG_HI - self._LOG_LO)
+        return min(max(int(frac * self.n_buckets), 0), self.n_buckets - 1)
+
+    def _service_load(self, r: Replica) -> float:
+        """Outstanding predicted service time, in service-weight units."""
+        k = self.overhead_tokens
+        return sum(k + _budget(q) for q in r.queued_requests()) \
+            + sum(k + _budget(q) for q in r.inflight_requests())
+
+    def select(self, replicas, req, est_budget, now):
+        b = self._bucket(est_budget)
+        below = sum(self._weight[:b + 1])
+        total = sum(self._weight)
+        if req.estimate is None:
+            # first routing of this request: record it in the size CDF.
+            # Rerouted requests carry their admission estimate and are
+            # already counted — re-adding would skew the bands toward
+            # whatever a failed replica happened to hold.
+            self._weight[b] += self.overhead_tokens + est_budget
+        q = below / total if total > 0 else 0.5
+        n = len(replicas)
+        pref = replicas[min(int(q * n), n - 1)]
+        loads = {r.rid: self._service_load(r) for r in replicas}
+        if loads[pref.rid] > (self.spill_factor * min(loads.values())
+                              + self.spill_slack):
+            return min(replicas, key=lambda r: (loads[r.rid], r.rid))
+        return pref
+
+
+class TenantAffinityRouting(RoutingPolicy):
+    """Stable tenant -> replica mapping with load spill.
+
+    A tenant's requests land on its *warm* replica (continuous-batching
+    engines reuse compiled shapes / KV pages for a tenant's recurring
+    traffic) unless that replica's mass exceeds ``spill_factor`` times
+    the routable mean, in which case the request spills to the
+    least-loaded replica.
+    """
+
+    name = "tenant_affinity"
+
+    def __init__(self, spill_factor: float = 1.5) -> None:
+        self.spill_factor = float(spill_factor)
+
+    def select(self, replicas, req, est_budget, now):
+        # ring mapping on stable rids (not pool indices): the warm
+        # replica of every other tenant survives membership changes —
+        # a failed replica only remaps the tenants it was warming
+        target = int(req.tenant)
+        warm = next((r for r in replicas if r.rid >= target), replicas[0])
+        mean_mass = sum(r.token_mass() for r in replicas) / len(replicas)
+        if warm.token_mass() <= self.spill_factor * max(mean_mass, 1.0):
+            return warm
+        return min(replicas, key=lambda r: (r.token_mass(), r.rid))
+
+
+ROUTING_POLICIES: Dict[str, type] = {
+    p.name: p for p in (RoundRobinRouting, LeastLoadedRouting,
+                        DriftAwareRouting, TenantAffinityRouting)
+}
+
+
+def make_routing_policy(name: str, **kwargs) -> RoutingPolicy:
+    try:
+        cls = ROUTING_POLICIES[name.lower()]
+    except KeyError:
+        raise ValueError(f"unknown routing policy {name!r}; "
+                         f"available: {sorted(ROUTING_POLICIES)}") from None
+    return cls(**kwargs)
+
+
+@dataclass
+class RoutingRecord:
+    """One routing decision (cluster metrics / debugging)."""
+
+    time: float
+    req_id: int
+    tenant: str
+    est_budget: float
+    rid: int
+
+
+class ClusterRouter:
+    """Routes admitted requests onto replicas.
+
+    Uses the *shared* :class:`AdaptiveTokenEstimator` to price a request
+    before it reaches any replica, so every routing decision sees the
+    same calibrated bias state the replicas' admission controllers use.
+    """
+
+    def __init__(self, policy: str | RoutingPolicy,
+                 estimator: AdaptiveTokenEstimator,
+                 record_log: bool = True) -> None:
+        self.policy: RoutingPolicy = (
+            policy if isinstance(policy, RoutingPolicy)
+            else make_routing_policy(policy))
+        self.estimator = estimator
+        self.log: List[RoutingRecord] = []
+        self._record = record_log
+
+    def price(self, req: Request) -> float:
+        """Estimated token budget (Eq. 1) under the current bias state.
+        Uses the preserved admission estimate when one exists (reroutes
+        must not be re-priced — the original estimate travels with the
+        request, mirroring the single-replica readmit contract)."""
+        if req.estimate is not None:
+            return req.estimate.t_budget
+        prompt_tokens = req.prompt_tokens or count_tokens(req.prompt)
+        return self.estimator.estimate(
+            req.category, req.tenant, prompt_tokens).t_budget
+
+    def route(self, replicas: Sequence[Replica], req: Request, now: float,
+              est_budget: Optional[float] = None,
+              exclude: Sequence[Replica] = ()) -> Optional[Replica]:
+        """Pick a routable replica, or None when the pool is empty
+        (caller sheds or parks the request). ``est_budget`` lets a
+        caller that already priced the request (the admission gate)
+        skip re-estimating."""
+        pool = [r for r in replicas if r.routable() and r not in exclude]
+        if not pool:
+            return None
+        pool.sort(key=lambda r: r.rid)
+        est = est_budget if est_budget is not None else self.price(req)
+        chosen = self.policy.select(pool, req, est, now)
+        chosen.n_routed += 1
+        if self._record:
+            self.log.append(RoutingRecord(
+                time=now, req_id=req.req_id, tenant=req.tenant.label,
+                est_budget=est, rid=chosen.rid))
+        return chosen

@@ -1,0 +1,311 @@
+"""Cluster-level discrete-event simulator: N replicas, one event loop.
+
+Composes N per-replica :class:`~repro.serving.simulator.WorkerSimulator`
+instances (each driving its own :class:`DriftScheduler`, all sharing
+one :class:`AdaptiveTokenEstimator`) under a single event heap and a
+single seed:
+
+    arrival -> GlobalAdmission (rate limits, backpressure; shed or pass)
+            -> ClusterRouter   (round_robin / least_loaded /
+                                drift_aware / tenant_affinity)
+            -> replica's DriftScheduler -> replica workers
+
+Replica events (batch_start/batch_done/fail/repair) emitted by a
+replica's simulator are routed back through the shared heap via the
+sink mechanism, so cross-replica ordering is exact and deterministic.
+
+Fault injection composes with the per-worker story: a replica failure
+aborts its in-flight batches (re-queued with estimates preserved, no
+bias feedback — the at-most-once contract), then the cluster drains the
+failed replica's queue and *reroutes* the stranded requests to the
+surviving replicas. The replica rejoins the routable pool when its
+workers repair.
+
+The optional :class:`Autoscaler` runs at every control tick: scale-up
+provisions a fresh replica (cold start delay before it serves; its
+scheduler shares the cluster estimator so it is calibration-warm from
+its first request), scale-down marks the least-loaded replica DRAINING
+(finishes its backlog, takes no new work, then leaves the pool).
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import random
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from ..core.estimator import AdaptiveTokenEstimator, DriftConfig
+from ..core.request import Request
+from ..core.scheduler import DriftScheduler
+from ..serving.cost_model import CostModel, L4_QWEN_1_8B
+from ..serving.simulator import SimConfig, WorkerSimulator
+from ..workload.generator import ArrivalPlan
+from .admission import AdmissionConfig, GlobalAdmission
+from .autoscaler import SCALE_DOWN, SCALE_UP, Autoscaler
+from .metrics import ClusterMetrics, summarize_cluster
+from .replica import Replica, ReplicaState
+from .router import ClusterRouter, RoutingPolicy
+
+
+@dataclass(frozen=True)
+class ClusterConfig:
+    n_replicas: int = 4
+    workers_per_replica: int = 1
+    routing: str = "drift_aware"
+    scheduler_policy: str = "fifo"
+    batch_capacity: int = 32          # per replica (paper Sec. III-B)
+    batch_wait: float = 0.01
+    control_interval: float = 1.0     # autoscaler / telemetry cadence
+    max_time: float = 1e6             # hard stop against pathological stalls
+    # replica-level fault injection: (absolute time, replica id)
+    fail_events: Tuple[Tuple[float, int], ...] = ()
+    repair_time: float = 30.0
+    seed: int = 0
+
+
+class SimReplica(Replica):
+    """Replica backed by an externally-driven WorkerSimulator."""
+
+    def __init__(self, rid: int, scheduler: DriftScheduler,
+                 sim: WorkerSimulator) -> None:
+        super().__init__(rid, scheduler)
+        self.sim = sim
+
+    def inflight_requests(self) -> List[Request]:
+        return self.sim.inflight_requests()
+
+    def busy_workers(self) -> int:
+        return self.sim.n_busy_workers()
+
+    def alive_workers(self) -> int:
+        return self.sim.n_alive_workers()
+
+    def is_idle(self) -> bool:
+        return self.sim.is_idle()
+
+    def accept(self, req: Request, now: float) -> None:
+        """Admit a routed request (full admission path: estimate, log,
+        enqueue) and kick dispatch."""
+        self.sim.handle_event(now, "arrival", req)
+
+    def accept_reroute(self, req: Request, now: float) -> None:
+        """Take over a request stranded on a failed replica. The
+        original estimate and enqueue timestamp travel with it (no
+        re-estimation, no new admission record, no bias feedback) —
+        the cluster analogue of the head-of-queue readmit contract."""
+        self.sched.queues.enqueue(req, req.enqueue_time, front=True)
+        self.sim.handle_event(now, "kick", None)
+
+
+@dataclass
+class ClusterTelemetry:
+    time: float
+    n_active: int
+    n_starting: int
+    queue_mass: float
+    utilization: float
+
+
+class ClusterSimulator:
+    """One event loop over N replicas, a router, and a front door."""
+
+    def __init__(self, plan: ArrivalPlan,
+                 config: Optional[ClusterConfig] = None,
+                 cost_model: Optional[CostModel] = None,
+                 drift_config: Optional[DriftConfig] = None,
+                 admission: Optional[GlobalAdmission] = None,
+                 autoscaler: Optional[Autoscaler] = None,
+                 routing: Optional[RoutingPolicy] = None) -> None:
+        self.plan = plan
+        self.cfg = config or ClusterConfig()
+        self.cost = cost_model or L4_QWEN_1_8B
+        self.rng = random.Random(self.cfg.seed)   # one seed, shared
+        self.estimator = AdaptiveTokenEstimator(drift_config or DriftConfig())
+        self.admission = admission
+        self.autoscaler = autoscaler
+        self.router = ClusterRouter(routing or self.cfg.routing,
+                                    self.estimator)
+        self.replicas: List[SimReplica] = []
+        self.telemetry: List[ClusterTelemetry] = []
+        self.n_rerouted = 0
+        self.completed_total = 0
+        self.phase_boundary = 0.0
+        self._events: List[tuple] = []
+        self._eseq = itertools.count()
+        self._rid_seq = itertools.count()
+        for _ in range(self.cfg.n_replicas):
+            self._provision_replica(ReplicaState.ACTIVE)
+
+    # ------------------------------------------------------------------
+    def _push(self, t: float, kind: str, payload=None) -> None:
+        heapq.heappush(self._events, (t, next(self._eseq), kind, payload))
+
+    def _provision_replica(self, state: ReplicaState) -> SimReplica:
+        rid = next(self._rid_seq)
+        sched = DriftScheduler(policy=self.cfg.scheduler_policy,
+                               estimator=self.estimator)
+        sim = WorkerSimulator(
+            sched,
+            config=SimConfig(
+                batch_capacity=self.cfg.batch_capacity,
+                batch_wait=self.cfg.batch_wait,
+                n_workers=self.cfg.workers_per_replica,
+                repair_time=self.cfg.repair_time,
+                seed=self.cfg.seed),
+            cost_model=self.cost,
+            sink=lambda t, kind, payload, rid=rid:
+                self._push(t, "replica", (rid, kind, payload)),
+            rng=self.rng)
+        rep = SimReplica(rid, sched, sim)
+        rep.state = state
+        self.replicas.append(rep)
+        return rep
+
+    # ------------------------------------------------------------------
+    def _n_shed(self) -> int:
+        return self.admission.n_shed() if self.admission else 0
+
+    def _processed(self) -> int:
+        return self.completed_total + self._n_shed()
+
+    def cluster_token_mass(self) -> float:
+        return sum(r.token_mass() for r in self.replicas
+                   if r.state is not ReplicaState.STOPPED)
+
+    # ------------------------------------------------------------------
+    def run(self) -> ClusterMetrics:
+        cfg = self.cfg
+        n_start = cfg.n_replicas
+        n_cal = len(self.plan.calibration)
+        total = len(self.plan)
+        for t, req in self.plan.calibration:
+            self._push(t, "arrival", req)
+        for ft, rid in cfg.fail_events:
+            self._push(ft, "replica_fail", rid)
+        self._push(0.0, "control", None)
+
+        stress_released = n_cal >= total
+        now = 0.0
+        while self._events and self._processed() < total:
+            now, _, kind, payload = heapq.heappop(self._events)
+            if now > cfg.max_time:
+                break
+            # Sec. II-G protocol at cluster scope: release the stress
+            # burst once the calibration phase has fully drained
+            # (completed or shed — shed requests never complete).
+            if not stress_released and self._processed() >= n_cal:
+                stress_released = True
+                self.phase_boundary = now
+                for dt, req in self.plan.stress:
+                    self._push(now + dt, "arrival", req)
+            if kind == "arrival":
+                self._on_arrival(payload, now)
+            elif kind == "replica":
+                rid, rkind, rpayload = payload
+                self._on_replica_event(rid, rkind, rpayload, now)
+            elif kind == "replica_fail":
+                self._fail_replica(payload, now)
+            elif kind == "replica_ready":
+                rep = self.replicas[payload]
+                if rep.state is ReplicaState.STARTING:
+                    rep.state = ReplicaState.ACTIVE
+            elif kind == "control":
+                self._control(now)
+                if self._processed() < total:
+                    self._push(now + cfg.control_interval, "control", None)
+        return self._summarize(n_start)
+
+    # ------------------------------------------------------------------
+    def _on_arrival(self, req: Request, now: float) -> None:
+        est = self.router.price(req)
+        if self.admission is not None:
+            ok, _ = self.admission.offer(req, est, now,
+                                         self.cluster_token_mass())
+            if not ok:
+                return
+        target = self.router.route(self.replicas, req, now, est_budget=est)
+        if target is None:
+            if self.admission is None:
+                # no front door to account the shed: park until the
+                # pool recovers by retrying shortly
+                self._push(now + 1.0, "arrival", req)
+            else:
+                self.admission.shed_no_replica(req, est, now)
+            return
+        target.accept(req, now)
+
+    def _on_replica_event(self, rid: int, rkind: str, rpayload,
+                          now: float) -> None:
+        rep = self.replicas[rid]
+        if rkind == "repair" and rep.state is ReplicaState.FAILED:
+            rep.state = ReplicaState.ACTIVE
+        self.completed_total += rep.sim.handle_event(now, rkind, rpayload)
+
+    def _fail_replica(self, rid: int, now: float) -> None:
+        rep = self.replicas[rid]
+        if rep.state in (ReplicaState.STOPPED, ReplicaState.FAILED):
+            return
+        rep.state = ReplicaState.FAILED
+        # abort in-flight batches: estimates preserved, no bias feedback,
+        # requests land back at the head of the replica's own queue
+        for wid in range(len(rep.sim.workers)):
+            rep.sim.handle_event(now, "fail", wid)
+        # then reroute the whole stranded queue to surviving replicas
+        stranded = rep.sched.queues.drain()
+        for req in reversed(stranded):      # front-pushes: keep order
+            target = self.router.route(self.replicas, req, now,
+                                       exclude=(rep,))
+            if target is None:
+                # total outage: park on the failed replica, served
+                # after its repair
+                rep.sched.queues.enqueue(req, req.enqueue_time, front=True)
+                continue
+            rep.n_rerouted_away += 1
+            self.n_rerouted += 1
+            target.accept_reroute(req, now)
+
+    def _control(self, now: float) -> None:
+        for rep in self.replicas:
+            if rep.state is ReplicaState.DRAINING and rep.is_idle():
+                rep.state = ReplicaState.STOPPED
+        if self.autoscaler is not None:
+            n_starting = sum(1 for r in self.replicas
+                             if r.state is ReplicaState.STARTING)
+            action = self.autoscaler.decide(now, self.replicas, n_starting)
+            if action == SCALE_UP:
+                rep = self._provision_replica(ReplicaState.STARTING)
+                self._push(now + self.autoscaler.cfg.startup_delay,
+                           "replica_ready", rep.rid)
+            elif action == SCALE_DOWN:
+                target = self.autoscaler.pick_drain_target(self.replicas)
+                if target is not None:
+                    target.state = ReplicaState.DRAINING
+        mass, util, n_active = Autoscaler.signals(self.replicas)
+        self.telemetry.append(ClusterTelemetry(
+            time=now, n_active=n_active,
+            n_starting=sum(1 for r in self.replicas
+                           if r.state is ReplicaState.STARTING),
+            queue_mass=mass, utilization=util))
+
+    # ------------------------------------------------------------------
+    def _summarize(self, n_start: int) -> ClusterMetrics:
+        completed: List[Request] = []
+        busy: Dict[int, float] = {}
+        done: Dict[int, int] = {}
+        n_failed = 0
+        for rep in self.replicas:
+            completed.extend(rep.sched.completed)
+            busy[rep.rid] = (sum(w.busy_time for w in rep.sim.workers)
+                             / max(len(rep.sim.workers), 1))
+            done[rep.rid] = len(rep.sched.completed)
+            n_failed += rep.sim.n_failed_dispatches
+        completed.sort(key=lambda r: (r.completion_time, r.req_id))
+        return summarize_cluster(
+            self.router.policy.name, self.cfg.scheduler_policy,
+            self.estimator.config.bias_enabled, completed,
+            replicas=self.replicas, admission=self.admission,
+            autoscaler=self.autoscaler, n_replicas_start=n_start,
+            replica_busy_time=busy, replica_completed=done,
+            n_failed_dispatches=n_failed, n_rerouted=self.n_rerouted)

@@ -19,7 +19,7 @@ admission sequence) is checkpointable for restart.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Mapping, Optional
 
 from .admission import AdmissionController
 from .drift import DriftSample, DriftTracker
@@ -34,9 +34,18 @@ class DriftScheduler:
 
     def __init__(self, policy: str | SchedulingPolicy = "fifo",
                  config: Optional[DriftConfig] = None,
+                 estimator: Optional[AdaptiveTokenEstimator] = None,
                  **policy_kwargs) -> None:
-        self.config = config or DriftConfig()
-        self.estimator = AdaptiveTokenEstimator(self.config)
+        """``estimator`` may be shared across schedulers: the cluster
+        layer hands every replica the same AdaptiveTokenEstimator so
+        drift feedback from any replica calibrates them all."""
+        if estimator is not None and config is not None \
+                and estimator.config is not config:
+            raise ValueError("pass either a shared estimator or a config, "
+                             "not two disagreeing ones")
+        self.estimator = estimator or AdaptiveTokenEstimator(
+            config or DriftConfig())
+        self.config = self.estimator.config
         self.queues = TenantQueueManager()
         self.admission = AdmissionController(self.estimator, self.queues)
         self.policy: SchedulingPolicy = (
@@ -102,11 +111,35 @@ class DriftScheduler:
             "queued_req_ids": [r.req_id for r in self.queues.all_requests()],
         }
 
-    def load_state_dict(self, state: dict) -> None:
+    def load_state_dict(self, state: dict,
+                        requests: Optional[Mapping[int, Request]] = None) -> None:
+        """Restore scheduler state. ``requests`` maps ``req_id`` to the
+        live :class:`Request` objects for any queued-at-checkpoint
+        requests (queues hold object references, so the checkpoint only
+        records ids); without it a checkpoint with a non-empty queue is
+        refused rather than silently dropping the queue."""
         if state.get("policy") != self.policy.name:
             raise ValueError(
                 f"checkpoint policy {state.get('policy')!r} != {self.policy.name!r}"
             )
+        # validate everything before mutating anything: a caller that
+        # catches a restore error must be left with its original state
+        queued_ids = list(state.get("queued_req_ids", []))
+        if queued_ids and requests is None:
+            raise ValueError(
+                f"checkpoint has {len(queued_ids)} queued requests; pass "
+                "a `requests` registry (req_id -> Request) to restore them")
+        missing = [i for i in queued_ids if i not in (requests or {})]
+        if missing:
+            raise KeyError(f"request registry missing req_ids {missing}")
         self.policy.load_state_dict(state.get("policy_state", {}))
         self.bias_store.load_state_dict(state.get("bias", {}))
         self.dispatched = int(state.get("dispatched", 0))
+        # the queue must mirror the checkpoint either way — drop any
+        # stale queued requests even when the checkpoint queue is empty
+        self.queues.drain()
+        for rid in queued_ids:
+            req = requests[rid]
+            # preserve the original enqueue timestamp: restore must not
+            # reset aging/FIFO order
+            self.queues.enqueue(req, req.enqueue_time)

@@ -19,7 +19,7 @@ import sys
 from ..configs import ARCHS, smoke_config
 from ..core.estimator import DriftConfig
 from ..core.scheduler import DriftScheduler
-from ..serving.simulator import ClusterSimulator, SimConfig
+from ..serving.simulator import SimConfig, WorkerSimulator
 from ..workload.generator import GeneratorConfig, WorkloadGenerator
 
 
@@ -51,7 +51,7 @@ def main(argv=None) -> int:
         sim_cfg = SimConfig(
             seed=args.seed, n_workers=args.workers,
             fail_times=(args.fail_at,) if args.fail_at else ())
-        sim = ClusterSimulator(sched, plan, sim_cfg)
+        sim = WorkerSimulator(sched, plan, sim_cfg)
         metrics = sim.run()
     else:
         import jax

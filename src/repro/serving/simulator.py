@@ -1,9 +1,16 @@
-"""Discrete-event simulation of the multi-tenant serving cluster.
+"""Discrete-event simulation of one serving worker group (a *replica*).
 
 Drives the *real* DriftScheduler (the identical state machine the JAX
 engine uses) against a calibrated service-time model, reproducing the
 paper's protocol: two-phase arrivals (calibration + stress), batch
 capacity 32, batch wait 0.01 s, GPU saturation, telemetry sampling.
+
+:class:`WorkerSimulator` can run standalone (its own event loop, the
+paper's single-replica protocol) or be composed: when constructed with
+an external event ``sink`` it emits its events there instead of its own
+heap, and the owner drives it through :meth:`handle_event`. The
+cluster-level simulator (``repro.cluster.simulator``) composes N of
+these under one heap and one seed.
 
 Beyond-paper cluster features (DESIGN.md §7) are simulated faithfully:
 
@@ -25,7 +32,7 @@ import heapq
 import itertools
 import random
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from ..core.request import Request, RequestState
 from ..core.scheduler import DriftScheduler
@@ -82,18 +89,21 @@ class TelemetrySample:
     queue_depth: int
 
 
-class ClusterSimulator:
-    """Event-driven cluster: arrivals -> DriftScheduler -> workers."""
+class WorkerSimulator:
+    """Event-driven worker group: arrivals -> DriftScheduler -> workers."""
 
     def __init__(self, scheduler: DriftScheduler,
-                 plan: ArrivalPlan,
+                 plan: Optional[ArrivalPlan] = None,
                  config: Optional[SimConfig] = None,
-                 cost_model: Optional[CostModel] = None) -> None:
+                 cost_model: Optional[CostModel] = None,
+                 sink: Optional[Callable[[float, str, object], None]] = None,
+                 rng: Optional[random.Random] = None) -> None:
         self.sched = scheduler
         self.plan = plan
         self.cfg = config or SimConfig()
         self.cost = cost_model or L4_QWEN_1_8B
-        self.rng = random.Random(self.cfg.seed)
+        self.rng = rng or random.Random(self.cfg.seed)
+        self._sink = sink
         self.workers = [WorkerState() for _ in range(self.cfg.n_workers)]
         self.heartbeats = HeartbeatMonitor(timeout=10.0)
         self.stragglers = StragglerDetector()
@@ -109,9 +119,50 @@ class ClusterSimulator:
 
     # ------------------------------------------------------------------
     def _push(self, t: float, kind: str, payload=None) -> None:
-        heapq.heappush(self._events, (t, next(self._eseq), kind, payload))
+        if self._sink is not None:
+            self._sink(t, kind, payload)
+        else:
+            heapq.heappush(self._events, (t, next(self._eseq), kind, payload))
+
+    def handle_event(self, now: float, kind: str, payload=None) -> int:
+        """Process one event; returns the number of completions it
+        produced. Used by :meth:`run` and by external composers (the
+        cluster simulator) alike. ``telemetry`` is loop-owned and not
+        handled here."""
+        if kind == "arrival":
+            self.sched.submit(payload, now)
+            self.sched.queues.record_depth(now)
+            self._try_dispatch(now)
+        elif kind == "batch_start":
+            wid = payload
+            self._pending_batch_start[wid] = False
+            self._start_batch(wid, now)
+        elif kind == "batch_done":
+            wid, reqs, aborted = payload
+            done = self._finish_batch(wid, reqs, aborted, now)
+            self._try_dispatch(now)
+            return done
+        elif kind == "fail":
+            self._fail_worker(payload, now)
+        elif kind == "repair":
+            self.workers[payload].alive = True
+            self.workers[payload].idle = True
+            self._try_dispatch(now)
+        elif kind == "slow":
+            self.workers[payload].slow = True
+        elif kind == "kick":
+            # external composer enqueued work directly (e.g. a cluster
+            # reroute); just re-evaluate dispatch
+            self._try_dispatch(now)
+        else:
+            raise ValueError(f"unknown simulator event {kind!r}")
+        return 0
 
     def run(self) -> RunMetrics:
+        if self.plan is None:
+            raise ValueError("standalone run() needs an ArrivalPlan")
+        if self._sink is not None:
+            raise ValueError("externally-driven simulator has no run loop")
         cfg = self.cfg
         n_cal = len(self.plan.calibration)
         for t, req in self.plan.calibration:
@@ -135,31 +186,13 @@ class ClusterSimulator:
                 self.phase_boundary = now
                 for dt, req in self.plan.stress:
                     self._push(now + dt, "arrival", req)
-            if kind == "arrival":
-                self.sched.submit(payload, now)
-                self.sched.queues.record_depth(now)
-                self._try_dispatch(now)
-            elif kind == "batch_start":
-                wid = payload
-                self._pending_batch_start[wid] = False
-                self._start_batch(wid, now)
-            elif kind == "batch_done":
-                wid, reqs, aborted = payload
-                completed += self._finish_batch(wid, reqs, aborted, now)
-                self._try_dispatch(now)
-            elif kind == "fail":
-                self._fail_worker(payload, now)
-            elif kind == "repair":
-                self.workers[payload].alive = True
-                self.workers[payload].idle = True
-                self._try_dispatch(now)
-            elif kind == "slow":
-                self.workers[payload].slow = True
-            elif kind == "telemetry":
+            if kind == "telemetry":
                 self._sample_telemetry(now)
                 self._maybe_hedge(now)
                 if completed < total:
                     self._push(now + cfg.telemetry_interval, "telemetry", None)
+            else:
+                completed += self.handle_event(now, kind, payload)
 
         busy = sum(w.busy_time for w in self.workers) / max(len(self.workers), 1)
         return summarize_run(
@@ -169,6 +202,19 @@ class ClusterSimulator:
             busy_time=busy,
             n_failed_dispatches=self.n_failed_dispatches,
         )
+
+    # --- composition introspection (used by repro.cluster) -------------
+    def inflight_requests(self) -> List[Request]:
+        return [r for reqs in self._inflight.values() for r in reqs]
+
+    def n_busy_workers(self) -> int:
+        return sum(1 for w in self.workers if w.alive and not w.idle)
+
+    def n_alive_workers(self) -> int:
+        return sum(1 for w in self.workers if w.alive)
+
+    def is_idle(self) -> bool:
+        return not self._inflight and self.sched.queue_depth() == 0
 
     # ------------------------------------------------------------------
     def _eligible_workers(self, now: float) -> List[int]:
@@ -305,3 +351,9 @@ class ClusterSimulator:
             active_requests=active,
             queue_depth=self.sched.queue_depth(),
         ))
+
+
+# Backwards-compatible alias: before the cluster layer existed this class
+# was the only "cluster" in the codebase. The cluster-level simulator now
+# lives in repro.cluster.simulator.ClusterSimulator.
+ClusterSimulator = WorkerSimulator

@@ -83,6 +83,35 @@ class ArrivalPlan:
         return len(self.calibration) + len(self.stress)
 
 
+def cluster_stress_config(n_replicas: int, *,
+                          total_requests: int = 1200,
+                          per_replica_rate: float = 8.0,
+                          seed: int = 0,
+                          max_tokens: int = 1024) -> GeneratorConfig:
+    """Heterogeneous cluster stress traffic (multi-replica arrival plan).
+
+    Same two-burst protocol as the paper, with (a) arrival rates scaled
+    to the replica count so the cluster — not one worker — is what
+    saturates, and (b) a heavier-tailed category mix (more technical /
+    report traffic) so request sizes are genuinely heterogeneous: the
+    regime where routing policy choice matters.
+    """
+    return GeneratorConfig(
+        total_requests=total_requests,
+        calibration_requests=total_requests // 3,
+        category_weights={
+            Category.SHORT_QA: 0.30,
+            Category.SUMMARY: 0.20,
+            Category.TECHNICAL: 0.25,
+            Category.REPORT: 0.25,
+        },
+        calibration_rate=0.75 * per_replica_rate * n_replicas,
+        stress_rate=per_replica_rate * n_replicas,
+        max_tokens=max_tokens,
+        seed=seed,
+    )
+
+
 class WorkloadGenerator:
     """Algorithm 1, deterministic."""
 

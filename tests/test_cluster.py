@@ -1,0 +1,294 @@
+"""Cluster serving layer: routing, admission, autoscaling, failure
+rerouting, and end-to-end determinism (jax-free — simulator only)."""
+
+import pytest
+
+from repro.cluster import (AdmissionConfig, Autoscaler, AutoscalerConfig,
+                           ClusterConfig, ClusterRouter, ClusterSimulator,
+                           GlobalAdmission, ReplicaState, TokenBucket,
+                           make_routing_policy)
+from repro.cluster.simulator import SimReplica
+from repro.core.estimator import AdaptiveTokenEstimator, DriftConfig
+from repro.core.request import Category, Request, TenantTier
+from repro.core.scheduler import DriftScheduler
+from repro.serving.cost_model import L4_MAX_DRIVEN
+from repro.serving.simulator import SimConfig, WorkerSimulator
+from repro.workload.generator import WorkloadGenerator, cluster_stress_config
+
+
+def _req(tenant=TenantTier.STANDARD, category=Category.SUMMARY,
+         prompt="summarize the incident report for the oncall"):
+    return Request(tenant=tenant, category=category, prompt=prompt,
+                   true_output_tokens=200)
+
+
+def _replicas(n, estimator=None):
+    est = estimator or AdaptiveTokenEstimator(DriftConfig())
+    reps = []
+    for i in range(n):
+        sched = DriftScheduler(estimator=est)
+        sim = WorkerSimulator(sched, config=SimConfig(),
+                              sink=lambda *a: None)
+        reps.append(SimReplica(i, sched, sim))
+    return est, reps
+
+
+def _mkplan(seed, n=4, total=300):
+    gen = WorkloadGenerator(cluster_stress_config(n, seed=seed,
+                                                  total_requests=total))
+    return gen.plan(seed=seed)
+
+
+def _run(seed=1, n=4, total=300, **kw):
+    cfg = kw.pop("config", None) or ClusterConfig(n_replicas=n, seed=seed)
+    sim = ClusterSimulator(plan=_mkplan(seed, n, total), config=cfg,
+                           cost_model=L4_MAX_DRIVEN, **kw)
+    return sim, sim.run()
+
+
+# --- routing policies --------------------------------------------------
+
+def test_round_robin_cycles_deterministically():
+    est, reps = _replicas(3)
+    router = ClusterRouter("round_robin", est)
+    picks = [router.route(reps, _req(), now=0.0).rid for _ in range(6)]
+    assert picks == [0, 1, 2, 0, 1, 2]
+
+
+def test_least_loaded_picks_min_token_mass():
+    est, reps = _replicas(3)
+    router = ClusterRouter("least_loaded", est)
+    # preload replica 0 and 1 with queued work
+    for rid in (0, 0, 1):
+        reps[rid].sched.submit(_req(), now=0.0)
+    assert router.route(reps, _req(), now=0.0).rid == 2
+
+
+def test_drift_aware_segregates_sizes_and_spills():
+    est, reps = _replicas(2)
+    router = ClusterRouter("drift_aware", est)
+    light = _req(category=Category.SHORT_QA, prompt="what is dns")
+    heavy = _req(category=Category.REPORT,
+                 prompt="write a full postmortem with timeline and actions")
+    # seed the histogram with both sizes, then check band placement
+    for _ in range(10):
+        router.price(light), router.price(heavy)
+        router.policy._weight[router.policy._bucket(router.price(light))] += \
+            router.price(light)
+        router.policy._weight[router.policy._bucket(router.price(heavy))] += \
+            router.price(heavy)
+    assert router.route(reps, light, now=0.0).rid == 0   # light band
+    assert router.route(reps, heavy, now=0.0).rid == 1   # heavy band
+    # overload the heavy band far past the spill threshold -> spills
+    for _ in range(80):
+        reps[1].sched.submit(_req(category=Category.REPORT), now=0.0)
+    assert router.route(reps, heavy, now=0.0).rid == 0
+
+
+def test_tenant_affinity_sticks_then_spills():
+    est, reps = _replicas(3)
+    router = ClusterRouter("tenant_affinity", est)
+    prem = _req(tenant=TenantTier.PREMIUM)
+    warm = router.route(reps, prem, now=0.0)
+    assert warm.rid == int(TenantTier.PREMIUM) % 3
+    for _ in range(50):   # overload the warm replica -> spill elsewhere
+        warm.sched.submit(_req(tenant=TenantTier.PREMIUM), now=0.0)
+    spilled = router.route(reps, _req(tenant=TenantTier.PREMIUM), now=0.0)
+    assert spilled.rid != warm.rid
+
+
+def test_router_skips_unroutable_replicas():
+    est, reps = _replicas(3)
+    router = ClusterRouter("round_robin", est)
+    reps[0].state = ReplicaState.FAILED
+    reps[2].state = ReplicaState.DRAINING
+    for _ in range(4):
+        assert router.route(reps, _req(), now=0.0).rid == 1
+    reps[1].state = ReplicaState.STOPPED
+    assert router.route(reps, _req(), now=0.0) is None
+
+
+def test_unknown_routing_policy_rejected():
+    with pytest.raises(ValueError):
+        make_routing_policy("warp_speed")
+
+
+# --- global admission --------------------------------------------------
+
+def test_token_bucket_boundary_and_refill():
+    b = TokenBucket(capacity=100.0, rate=10.0)
+    assert b.try_consume(100.0, now=0.0)      # exactly-full boundary
+    assert not b.try_consume(0.1, now=0.0)    # empty
+    assert not b.try_consume(50.0, now=4.0)   # refilled only 40
+    assert b.try_consume(50.0, now=5.0)       # refilled to exactly 50
+
+
+def test_admission_rate_limit_sheds_per_tier():
+    cfg = AdmissionConfig(
+        bucket_capacity={t: 500.0 for t in TenantTier},
+        refill_rate={t: 0.0 for t in TenantTier})
+    adm = GlobalAdmission(cfg)
+    ok1, _ = adm.offer(_req(), 400.0, now=0.0, cluster_token_mass=0.0)
+    ok2, reason = adm.offer(_req(), 400.0, now=0.0, cluster_token_mass=0.0)
+    assert ok1 and not ok2 and reason == "rate_limited"
+    assert adm.n_accepted(TenantTier.STANDARD) == 1
+    assert adm.shed[TenantTier.STANDARD] == {"rate_limited": 1}
+    assert adm.shed_rate(TenantTier.STANDARD) == pytest.approx(0.5)
+    assert adm.shed_rate(TenantTier.PREMIUM) == 0.0
+
+
+def test_admission_no_replica_shed_refunds_bucket():
+    cfg = AdmissionConfig(
+        bucket_capacity={t: 1000.0 for t in TenantTier},
+        refill_rate={t: 0.0 for t in TenantTier})
+    adm = GlobalAdmission(cfg)
+    r = _req()
+    ok, _ = adm.offer(r, 600.0, now=0.0, cluster_token_mass=0.0)
+    assert ok
+    adm.shed_no_replica(r, 600.0, now=0.0)   # total outage after admit
+    # outage must not also charge the tenant's rate limit
+    assert adm.buckets[TenantTier.STANDARD].level == pytest.approx(1000.0)
+    assert adm.n_accepted(TenantTier.STANDARD) == 0
+    assert adm.shed[TenantTier.STANDARD] == {"no_replica": 1}
+
+
+def test_tenant_affinity_warm_replica_stable_across_membership():
+    est, reps = _replicas(4)
+    router = ClusterRouter("tenant_affinity", est)
+    warm_std = router.route(reps, _req(tenant=TenantTier.STANDARD), now=0.0)
+    assert warm_std.rid == int(TenantTier.STANDARD)
+    # an unrelated replica failing must not remap STANDARD's warm home
+    reps[3].state = ReplicaState.FAILED
+    assert router.route(reps, _req(tenant=TenantTier.STANDARD),
+                        now=0.0).rid == warm_std.rid
+    # STANDARD's own replica failing remaps only that tenant (ring: next rid)
+    reps[3].state = ReplicaState.ACTIVE
+    reps[warm_std.rid].state = ReplicaState.FAILED
+    assert router.route(reps, _req(tenant=TenantTier.STANDARD),
+                        now=0.0).rid == warm_std.rid + 1
+    assert router.route(reps, _req(tenant=TenantTier.PREMIUM),
+                        now=0.0).rid == int(TenantTier.PREMIUM)
+
+
+def test_admission_backpressure_precedes_buckets():
+    adm = GlobalAdmission(AdmissionConfig(max_cluster_token_mass=1000.0))
+    ok, reason = adm.offer(_req(), 600.0, now=0.0, cluster_token_mass=500.0)
+    assert not ok and reason == "backpressure"
+    # bucket untouched by a backpressure shed
+    assert adm.buckets[TenantTier.STANDARD].level == \
+        adm.cfg.bucket_capacity[TenantTier.STANDARD]
+
+
+# --- autoscaler --------------------------------------------------------
+
+def test_autoscaler_hysteresis_and_cooldown():
+    cfg = AutoscalerConfig(min_replicas=1, max_replicas=4,
+                           up_queue_mass_per_replica=1000.0,
+                           down_queue_mass_per_replica=100.0,
+                           down_utilization=0.5, cooldown=10.0)
+    scaler = Autoscaler(cfg)
+    est, reps = _replicas(2)
+    for _ in range(20):                      # heavy backlog on both
+        reps[0].sched.submit(_req(), now=0.0)
+        reps[1].sched.submit(_req(), now=0.0)
+    assert scaler.decide(0.0, reps) == "up"
+    assert scaler.decide(5.0, reps) is None          # cooldown
+    assert scaler.decide(10.0, reps) == "up"         # cooldown expired
+    # empty the queues -> below the down thresholds, but cooling down
+    for r in reps:
+        r.sched.queues.drain()
+    assert scaler.decide(15.0, reps) is None         # cooldown
+    assert scaler.decide(20.0, reps) == "down"
+    assert scaler.decide(25.0, reps) is None         # cooldown again
+    assert [e.action for e in scaler.events] == ["up", "up", "down"]
+
+
+def test_autoscaler_respects_min_max():
+    cfg = AutoscalerConfig(min_replicas=2, max_replicas=2,
+                           up_queue_mass_per_replica=10.0, cooldown=0.0)
+    scaler = Autoscaler(cfg)
+    est, reps = _replicas(2)
+    for _ in range(50):
+        reps[0].sched.submit(_req(), now=0.0)
+    assert scaler.decide(0.0, reps) is None           # at max
+    for r in reps:
+        r.sched.queues.drain()
+    assert scaler.decide(100.0, reps) is None         # at min
+
+
+# --- cluster simulator end-to-end --------------------------------------
+
+def test_cluster_completes_everything_and_shares_estimator():
+    sim, m = _run(seed=1, n=4, total=300)
+    assert m.run.n_completed == 300
+    # one shared bias store: per-replica schedulers all see every update
+    stores = {id(rep.sched.estimator.bias_store) for rep in sim.replicas}
+    assert len(stores) == 1
+    assert sum(sim.estimator.bias_store.update_counts().values()) == 300
+
+
+def test_cluster_determinism_same_seed_same_numbers():
+    _, a = _run(seed=3, n=4, total=300)
+    _, b = _run(seed=3, n=4, total=300)
+    assert a.as_dict() == b.as_dict()
+
+
+def test_replica_failure_reroutes_without_double_feedback():
+    cfg = ClusterConfig(n_replicas=4, seed=1, fail_events=((10.0, 0),),
+                        repair_time=20.0)
+    sim, m = _run(seed=1, n=4, total=300, config=cfg)
+    assert m.run.n_completed == 300                  # nothing lost
+    assert m.n_rerouted > 0                          # queue moved off rid 0
+    # at-most-once bias feedback: one update per completed request,
+    # regardless of retries/reroutes
+    assert sum(sim.estimator.bias_store.update_counts().values()) == 300
+    retried = [r for rep in sim.replicas for r in rep.sched.completed
+               if r.retries > 0]
+    assert m.run.n_failed_dispatches == 0 or retried or m.n_rerouted
+
+
+def test_failed_replica_rejoins_after_repair():
+    cfg = ClusterConfig(n_replicas=2, seed=1, fail_events=((5.0, 0),),
+                        repair_time=10.0)
+    sim, m = _run(seed=1, n=2, total=300, config=cfg)
+    assert m.run.n_completed == 300
+    assert sim.replicas[0].state is ReplicaState.ACTIVE  # rejoined
+    assert len(sim.replicas[0].sched.completed) > 0      # served post-repair
+
+
+def test_cluster_autoscales_up_under_burst():
+    scaler = Autoscaler(AutoscalerConfig(
+        min_replicas=2, max_replicas=6,
+        up_queue_mass_per_replica=10_000.0, cooldown=5.0,
+        startup_delay=2.0))
+    sim, m = _run(seed=1, n=2, total=400, autoscaler=scaler)
+    assert m.run.n_completed == 400
+    assert any(e["action"] == "up" for e in m.scale_events)
+    assert len(sim.replicas) > 2                     # pool actually grew
+    grown = [r for r in sim.replicas if r.rid >= 2]
+    assert sum(len(r.sched.completed) for r in grown) > 0  # and served
+
+
+def test_cluster_admission_sheds_and_accounts():
+    adm = GlobalAdmission(AdmissionConfig(
+        bucket_capacity={t: 15_000.0 for t in TenantTier},
+        refill_rate={t: 400.0 for t in TenantTier}))
+    sim, m = _run(seed=1, n=2, total=300, admission=adm)
+    assert 0 < m.shed_rate < 1
+    n_shed = sum(sum(v.values()) for v in adm.shed.values())
+    assert m.run.n_completed + n_shed == 300
+    # shed requests were never admitted anywhere
+    assert all(rec.reason in ("rate_limited", "backpressure")
+               for rec in adm.shed_log)
+
+
+def test_drift_aware_beats_round_robin_on_p99():
+    """The acceptance-criterion property at 4 replicas, heterogeneous
+    stress workload, batch-walk cost regime."""
+    p99 = {}
+    for routing in ("round_robin", "drift_aware"):
+        cfg = ClusterConfig(n_replicas=4, routing=routing, seed=1)
+        _, m = _run(seed=1, n=4, total=600, config=cfg)
+        assert m.run.n_completed == 600
+        p99[routing] = m.run.e2e.p99
+    assert p99["drift_aware"] < p99["round_robin"]

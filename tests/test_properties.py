@@ -2,6 +2,10 @@
 
 import math
 
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dependency (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.estimator import AdaptiveTokenEstimator, BiasStore, DriftConfig

@@ -73,6 +73,42 @@ def test_checkpoint_roundtrip_preserves_bias_and_cursor():
     assert s2.dispatched == s.dispatched
 
 
+def test_checkpoint_restores_queued_requests():
+    s = DriftScheduler("fifo")
+    reqs = [s.submit(_req(), now=float(i)) for i in range(4)]
+    s.dispatch(now=5.0)                       # one request leaves the queue
+    state = s.state_dict()
+    assert len(state["queued_req_ids"]) == 3
+
+    s2 = DriftScheduler("fifo")
+    s2.load_state_dict(state, requests={r.req_id: r for r in reqs})
+    assert s2.queue_depth() == 3
+    restored = [s2.dispatch(now=10.0).req_id for _ in range(3)]
+    assert restored == state["queued_req_ids"]    # FIFO order preserved
+
+
+def test_checkpoint_restore_drains_stale_queue():
+    s = DriftScheduler("fifo")
+    r = s.submit(_req(), now=0.0)
+    s.dispatch(now=0.0)
+    s.complete(r, 100, now=1.0)
+    state = s.state_dict()                    # empty queue at checkpoint
+    s2 = DriftScheduler("fifo")
+    s2.submit(_req(), now=0.0)                # stale pre-restore request
+    s2.load_state_dict(state)
+    assert s2.queue_depth() == 0              # mirror of the checkpoint
+
+
+def test_checkpoint_queued_requests_refused_without_registry():
+    s = DriftScheduler("fifo")
+    s.submit(_req(), now=0.0)
+    state = s.state_dict()
+    with pytest.raises(ValueError):
+        DriftScheduler("fifo").load_state_dict(state)
+    with pytest.raises(KeyError):
+        DriftScheduler("fifo").load_state_dict(state, requests={})
+
+
 def test_checkpoint_policy_mismatch_raises():
     s = DriftScheduler("fifo")
     with pytest.raises(ValueError):

@@ -6,7 +6,7 @@ import pytest
 from repro.core.estimator import DriftConfig
 from repro.core.scheduler import DriftScheduler
 from repro.core.drift import error_reduction
-from repro.serving.simulator import ClusterSimulator, SimConfig
+from repro.serving.simulator import SimConfig, WorkerSimulator
 from repro.workload.generator import GeneratorConfig, WorkloadGenerator
 
 # small runs keep the suite fast; the full 3000-request protocol runs in
@@ -18,7 +18,7 @@ def _run(policy="fifo", bias=True, sim_cfg=None, gen_cfg=SMALL, seed=7):
     plan = WorkloadGenerator(gen_cfg).plan(seed=seed)
     sched = DriftScheduler(policy=policy,
                            config=DriftConfig(bias_enabled=bias))
-    sim = ClusterSimulator(sched, plan, sim_cfg or SimConfig(seed=seed))
+    sim = WorkerSimulator(sched, plan, sim_cfg or SimConfig(seed=seed))
     metrics = sim.run()
     return sched, sim, metrics
 
