@@ -64,11 +64,26 @@ def std(xs: List[float]) -> float:
     return (sum((x - m) ** 2 for x in xs) / (len(xs) - 1)) ** 0.5
 
 
+def sanitize_json(obj):
+    """Replace non-finite floats (NaN/inf) with None so the output is
+    *strict* JSON — Python's json module would otherwise emit bare
+    ``NaN`` literals (e.g. empty LatencyStats percentiles), which jq,
+    JavaScript, and most non-Python consumers reject wholesale."""
+    import math
+    if isinstance(obj, float):
+        return obj if math.isfinite(obj) else None
+    if isinstance(obj, dict):
+        return {k: sanitize_json(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [sanitize_json(v) for v in obj]
+    return obj
+
+
 def save_json(name: str, payload: dict) -> str:
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, name + ".json")
     with open(path, "w") as f:
-        json.dump(payload, f, indent=1)
+        json.dump(sanitize_json(payload), f, indent=1)
     return path
 
 

@@ -1,25 +1,28 @@
 """Benchmark harness entry point: one module per paper table/figure
-plus the beyond-paper fault-tolerance and cluster-routing suites and
-the roofline summary.
+plus the beyond-paper fault-tolerance, cluster-routing, and
+P/D-disaggregation suites and the roofline summary.
 
     PYTHONPATH=src python -m benchmarks.run [--only NAME] [--json PATH]
 
 ``--json PATH`` additionally writes every executed benchmark's raw
-result dict (plus wall time and failure status) to one machine-readable
-JSON file, so per-PR perf trajectories can be captured in CI.
+result dict (plus wall time, failure status, the benchmark's config
+constants, and the repo git SHA) to one machine-readable JSON file, so
+per-PR perf trajectories stay attributable across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 import sys
 import time
 
 from . import (bench_bias_convergence, bench_cluster_routing,
                bench_drift_error, bench_fault_tolerance,
-               bench_gpu_exec_latency, bench_queue_dynamics,
-               bench_roofline, bench_semantic_runtime, bench_tail_latency,
+               bench_gpu_exec_latency, bench_pd_disagg,
+               bench_queue_dynamics, bench_roofline,
+               bench_semantic_runtime, bench_tail_latency,
                bench_tenant_qos, bench_wait_by_class)
 
 BENCHES = [
@@ -33,8 +36,40 @@ BENCHES = [
     ("gpu_exec_latency (Fig 9)", bench_gpu_exec_latency),
     ("fault_tolerance (beyond-paper)", bench_fault_tolerance),
     ("cluster_routing (beyond-paper)", bench_cluster_routing),
+    ("pd_disagg (beyond-paper)", bench_pd_disagg),
     ("roofline (deliverable g)", bench_roofline),
 ]
+
+
+def git_sha() -> str:
+    """Current repo HEAD (+ a '-dirty' marker), or 'unknown' outside a
+    work tree — recorded so BENCH_*.json trajectories are attributable
+    to the PR that produced them."""
+    try:
+        sha = subprocess.check_output(
+            ["git", "rev-parse", "HEAD"], stderr=subprocess.DEVNULL,
+            text=True).strip()
+        dirty = subprocess.run(
+            ["git", "diff", "--quiet", "HEAD"],
+            stderr=subprocess.DEVNULL).returncode != 0
+        return sha + ("-dirty" if dirty else "")
+    except Exception:
+        return "unknown"
+
+
+def bench_config(mod) -> dict:
+    """A benchmark module's protocol constants (public module-level
+    UPPERCASE values of plain-data type): the knobs that, together with
+    the git SHA, make a recorded result reproducible."""
+    out = {}
+    for k, v in vars(mod).items():
+        if not k.isupper() or k.startswith("_"):
+            continue
+        if isinstance(v, (int, float, str, bool, tuple, list)):
+            out[k] = v
+        elif isinstance(v, dict):
+            out[k] = {str(kk): str(vv) for kk, vv in v.items()}
+    return out
 
 
 def main(argv=None) -> int:
@@ -47,7 +82,9 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     failures = 0
-    results = {}
+    results = {"_meta": {"git_sha": git_sha(),
+                         "argv": list(argv) if argv is not None
+                         else sys.argv[1:]}}
     for name, mod in BENCHES:
         if args.only and args.only not in name:
             continue
@@ -58,17 +95,22 @@ def main(argv=None) -> int:
             print(mod.report(out))
             dt = time.time() - t0
             print(f"[done in {dt:.1f}s]")
-            results[name] = {"ok": True, "wall_s": dt, "result": out}
+            results[name] = {"ok": True, "wall_s": dt,
+                             "git_sha": results["_meta"]["git_sha"],
+                             "config": bench_config(mod), "result": out}
         except Exception as e:  # keep the harness going
             failures += 1
             import traceback
             print(f"[FAILED] {type(e).__name__}: {e}")
             traceback.print_exc()
             results[name] = {"ok": False, "wall_s": time.time() - t0,
+                             "git_sha": results["_meta"]["git_sha"],
+                             "config": bench_config(mod),
                              "error": f"{type(e).__name__}: {e}"}
     if args.json:
+        from .common import sanitize_json
         with open(args.json, "w") as f:
-            json.dump(results, f, indent=1, default=str)
+            json.dump(sanitize_json(results), f, indent=1, default=str)
         print(f"\n[json results -> {args.json}]")
     return 1 if failures else 0
 

@@ -5,18 +5,22 @@ the same state machine out to N replicas without changing it:
 
 * :mod:`replica`    — the execution-agnostic replica surface (state,
   estimated-token mass, worker signals) routing and scaling reason over;
-* :mod:`router`     — ``ClusterRouter`` with four pluggable policies
+* :mod:`router`     — ``ClusterRouter`` with five pluggable policies
   (``round_robin`` / ``least_loaded`` / ``drift_aware`` /
-  ``tenant_affinity``), all priced by the *shared*
-  ``AdaptiveTokenEstimator``;
+  ``tenant_affinity`` / ``pd_disaggregated``), all priced by the
+  *shared* ``AdaptiveTokenEstimator``, plus the cross-replica
+  work-stealing protocol;
 * :mod:`admission`  — ``GlobalAdmission``: per-tenant token-bucket rate
   limits in estimated budget tokens, cluster-depth backpressure, and
   per-tier shed accounting;
 * :mod:`autoscaler` — utilization + queue-mass elastic scaling with
-  hysteresis, cooldowns, and cold-start delays;
+  hysteresis, cooldowns, and cold-start delays; ``RoleAutoscaler``
+  scales prefill and decode pools separately against a ratio target;
 * :mod:`simulator`  — ``ClusterSimulator``: N per-replica
   ``WorkerSimulator`` instances composed under one event heap and one
-  seed, with replica-failure rerouting;
+  seed, with replica-failure rerouting; under ``pd_disaggregated``
+  routing the request lifecycle becomes a two-stage pipeline (prefill
+  replica → modeled KV transfer → decode replica);
 * :mod:`driver`     — the same router/admission front end over real
   ``ServingEngine`` instances (oracle-EOS caveat applies, see the
   module docstring);
@@ -26,21 +30,25 @@ the same state machine out to N replicas without changing it:
 
 from .admission import (AdmissionConfig, GlobalAdmission, TokenBucket,
                         SHED_BACKPRESSURE, SHED_NO_REPLICA, SHED_RATE_LIMIT)
-from .autoscaler import Autoscaler, AutoscalerConfig, ScaleEvent
+from .autoscaler import (Autoscaler, AutoscalerConfig, RoleAutoscaler,
+                         RoleAutoscalerConfig, ScaleEvent)
 from .metrics import ClusterMetrics, ReplicaStats, summarize_cluster
-from .replica import Replica, ReplicaState
+from .replica import Replica, ReplicaRole, ReplicaState
 from .router import (ClusterRouter, DriftAwareRouting, LeastLoadedRouting,
-                     ROUTING_POLICIES, RoundRobinRouting, RoutingPolicy,
+                     PDDisaggregatedRouting, ROUTING_POLICIES,
+                     RoundRobinRouting, RoutingPolicy, StealPlan,
                      TenantAffinityRouting, make_routing_policy)
-from .simulator import ClusterConfig, ClusterSimulator, SimReplica
+from .simulator import ClusterConfig, ClusterSimulator, Handoff, SimReplica
 
 __all__ = [
     "AdmissionConfig", "Autoscaler", "AutoscalerConfig", "ClusterConfig",
     "ClusterMetrics", "ClusterRouter", "ClusterSimulator",
-    "DriftAwareRouting", "GlobalAdmission", "LeastLoadedRouting",
-    "ROUTING_POLICIES", "Replica", "ReplicaState", "ReplicaStats",
-    "RoundRobinRouting", "RoutingPolicy", "SHED_BACKPRESSURE",
-    "SHED_NO_REPLICA", "SHED_RATE_LIMIT", "ScaleEvent", "SimReplica",
+    "DriftAwareRouting", "GlobalAdmission", "Handoff",
+    "LeastLoadedRouting", "PDDisaggregatedRouting", "ROUTING_POLICIES",
+    "Replica", "ReplicaRole", "ReplicaState", "ReplicaStats",
+    "RoleAutoscaler", "RoleAutoscalerConfig", "RoundRobinRouting",
+    "RoutingPolicy", "SHED_BACKPRESSURE", "SHED_NO_REPLICA",
+    "SHED_RATE_LIMIT", "ScaleEvent", "SimReplica", "StealPlan",
     "TenantAffinityRouting", "TokenBucket", "make_routing_policy",
     "summarize_cluster",
 ]

@@ -71,6 +71,9 @@ class TokenBucket:
             self._t_last = now
 
     def try_consume(self, cost: float, now: float) -> bool:
+        """Debit ``cost`` (estimated budget tokens, Eq. 1 pricing from
+        the shared estimator) after refilling to ``now`` (seconds);
+        False (no debit) when the bucket cannot cover it."""
         self._refill(now)
         if cost <= self.level:
             self.level -= cost
@@ -78,6 +81,8 @@ class TokenBucket:
         return False
 
     def peek(self, now: float) -> float:
+        """Current level in estimated budget tokens, refilled to
+        ``now`` (seconds) without consuming."""
         self._refill(now)
         return self.level
 
@@ -143,19 +148,24 @@ class GlobalAdmission:
 
     # --- accounting ----------------------------------------------------
     def n_shed(self, tenant: Optional[TenantTier] = None) -> int:
+        """Requests shed (count), for one tier or all tiers."""
         tiers = [tenant] if tenant is not None else list(TenantTier)
         return sum(sum(self.shed[t].values()) for t in tiers)
 
     def n_accepted(self, tenant: Optional[TenantTier] = None) -> int:
+        """Requests admitted (count), for one tier or all tiers."""
         tiers = [tenant] if tenant is not None else list(TenantTier)
         return sum(self.accepted[t] for t in tiers)
 
     def shed_rate(self, tenant: Optional[TenantTier] = None) -> float:
+        """shed / (shed + accepted) in [0, 1]; 0.0 with no traffic."""
         shed = self.n_shed(tenant)
         total = shed + self.n_accepted(tenant)
         return shed / total if total else 0.0
 
     def summary(self) -> dict:
+        """JSON-ready accept/shed accounting: counts per tier, shed
+        reasons per tier, and overall + per-tier shed rates."""
         return {
             "accepted": {t.label: self.accepted[t] for t in TenantTier},
             "shed": {t.label: dict(self.shed[t]) for t in TenantTier},

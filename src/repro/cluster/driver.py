@@ -43,12 +43,16 @@ class EngineReplica(Replica):
         self.engine = engine
 
     def inflight_requests(self) -> List[Request]:
+        """Requests currently occupying live decode slots."""
         return [s.req for s in self.engine.slots if s.req is not None]
 
     def busy_workers(self) -> int:
+        """1 when any decode slot is active (the engine is one
+        worker), else 0 — the cluster utilization numerator."""
         return 1 if self.engine.active_slots() else 0
 
     def is_idle(self) -> bool:
+        """True when nothing is queued or decoding on this engine."""
         return self.queue_depth() == 0 and not self.engine.active_slots()
 
 
@@ -100,6 +104,9 @@ class EngineClusterDriver:
 
     def run_until_drained(self, *, max_steps: int = 100_000,
                           dt: float = 1.0) -> RunMetrics:
+        """Step every engine in lockstep (``dt`` simulated seconds per
+        round) until the whole pool is idle or ``max_steps`` rounds
+        pass, then aggregate the familiar RunMetrics."""
         # start the clock at the latest submit time so completion
         # timestamps never precede arrivals (negative e2e latencies)
         now = self._last_submit

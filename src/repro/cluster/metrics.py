@@ -13,29 +13,55 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
 from ..core.request import Request
-from ..serving.metrics import RunMetrics, summarize_run
+from ..serving.metrics import LatencyStats, RunMetrics, summarize_run
 from .admission import GlobalAdmission
 from .autoscaler import Autoscaler
 
 
 @dataclass
 class ReplicaStats:
+    """Per-replica run accounting: role, routing share, completions,
+    busy seconds, utilization (busy_time / makespan), and the P/D
+    handoff + work-stealing flow counters."""
+
     rid: int
     state: str
     n_routed: int
     n_completed: int
     busy_time: float
     utilization: float               # busy_time / makespan
+    role: str = "unified"
+    n_handoffs_in: int = 0
+    n_handoffs_out: int = 0
+    n_stolen_in: int = 0
+    n_stolen_away: int = 0
 
     def as_dict(self) -> dict:
-        return {"rid": self.rid, "state": self.state,
+        """JSON-ready flat dict (benchmark --json capture)."""
+        return {"rid": self.rid, "state": self.state, "role": self.role,
                 "n_routed": self.n_routed, "n_completed": self.n_completed,
-                "busy_time": self.busy_time, "utilization": self.utilization}
+                "busy_time": self.busy_time, "utilization": self.utilization,
+                "n_handoffs_in": self.n_handoffs_in,
+                "n_handoffs_out": self.n_handoffs_out,
+                "n_stolen_in": self.n_stolen_in,
+                "n_stolen_away": self.n_stolen_away}
 
 
 @dataclass
 class ClusterMetrics:
-    """One cluster run: the familiar RunMetrics plus cluster extras."""
+    """One cluster run: the familiar RunMetrics plus cluster extras.
+
+    The per-phase breakdown (all in seconds since arrival):
+
+    * ``ttft`` — time to first token. Real (end of the prefill phase)
+      on the P/D path; on the unified path the batch-atomic cost model
+      only observes the first token at batch end, so TTFT degrades to
+      e2e there — that asymmetry *is* the head-of-line effect
+      disaggregation removes.
+    * ``decode`` — KV arrival on the decode replica → completion
+      (decode queueing + execution); only P/D requests have it.
+    * ``kv_transfer`` — modeled prefill→decode transfer time.
+    """
 
     routing: str
     n_replicas_start: int
@@ -45,12 +71,20 @@ class ClusterMetrics:
     replicas: List[ReplicaStats]
     scale_events: List[dict]
     n_rerouted: int
+    ttft: LatencyStats = field(default_factory=LatencyStats)
+    decode: LatencyStats = field(default_factory=LatencyStats)
+    kv_transfer: LatencyStats = field(default_factory=LatencyStats)
+    n_handoffs: int = 0
+    n_handoffs_lost: int = 0
+    n_stolen: int = 0
 
     @property
     def shed_rate(self) -> float:
+        """Fraction of offered requests the front door shed."""
         return self.shed.get("shed_rate", 0.0)
 
     def as_dict(self) -> dict:
+        """JSON-ready nested dict (benchmark --json capture)."""
         return {
             "routing": self.routing,
             "n_replicas_start": self.n_replicas_start,
@@ -60,6 +94,12 @@ class ClusterMetrics:
             "replicas": [r.as_dict() for r in self.replicas],
             "scale_events": self.scale_events,
             "n_rerouted": self.n_rerouted,
+            "ttft": self.ttft.as_dict(),
+            "decode": self.decode.as_dict(),
+            "kv_transfer": self.kv_transfer.as_dict(),
+            "n_handoffs": self.n_handoffs,
+            "n_handoffs_lost": self.n_handoffs_lost,
+            "n_stolen": self.n_stolen,
         }
 
 
@@ -71,7 +111,17 @@ def summarize_cluster(routing: str, policy: str, bias_enabled: bool,
                       replica_busy_time: Dict[int, float],
                       replica_completed: Dict[int, int],
                       n_failed_dispatches: int = 0,
-                      n_rerouted: int = 0) -> ClusterMetrics:
+                      n_rerouted: int = 0,
+                      n_handoffs: int = 0,
+                      n_handoffs_lost: int = 0,
+                      n_stolen: int = 0) -> ClusterMetrics:
+    """Aggregate one cluster run into :class:`ClusterMetrics`.
+
+    ``completed`` are the finished requests across every replica (their
+    timestamps, in seconds, drive all latency stats); ``replica_busy_time``
+    maps rid -> busy seconds; handoff/steal counts come from the cluster
+    simulator's flow counters.
+    """
     run = summarize_run(policy, bias_enabled, completed,
                         busy_time=(sum(replica_busy_time.values())
                                    / max(len(replica_busy_time), 1)),
@@ -79,10 +129,13 @@ def summarize_cluster(routing: str, policy: str, bias_enabled: bool,
     makespan = max(run.makespan, 1e-9)
     stats = [
         ReplicaStats(
-            rid=r.rid, state=r.state.value, n_routed=r.n_routed,
+            rid=r.rid, state=r.state.value, role=r.role.value,
+            n_routed=r.n_routed,
             n_completed=replica_completed.get(r.rid, 0),
             busy_time=replica_busy_time.get(r.rid, 0.0),
-            utilization=replica_busy_time.get(r.rid, 0.0) / makespan)
+            utilization=replica_busy_time.get(r.rid, 0.0) / makespan,
+            n_handoffs_in=r.n_handoffs_in, n_handoffs_out=r.n_handoffs_out,
+            n_stolen_in=r.n_stolen_in, n_stolen_away=r.n_stolen_away)
         for r in replicas
     ]
     from .replica import ReplicaState
@@ -100,4 +153,11 @@ def summarize_cluster(routing: str, policy: str, bias_enabled: bool,
         scale_events=[vars(e).copy() for e in
                       (autoscaler.events if autoscaler else [])],
         n_rerouted=n_rerouted,
+        ttft=LatencyStats.of([r.ttft for r in completed]),
+        decode=LatencyStats.of([r.decode_latency for r in completed]),
+        kv_transfer=LatencyStats.of(
+            [r.kv_transfer_latency for r in completed]),
+        n_handoffs=n_handoffs,
+        n_handoffs_lost=n_handoffs_lost,
+        n_stolen=n_stolen,
     )

@@ -32,11 +32,37 @@ from ..core.scheduler import DriftScheduler
 
 
 class ReplicaState(enum.Enum):
+    """Replica lifecycle (autoscaler + fault-injection driven)."""
+
     STARTING = "starting"    # provisioned by the autoscaler, not ready yet
     ACTIVE = "active"        # routable
     DRAINING = "draining"    # scale-down: finishes its queue, takes no new work
     FAILED = "failed"        # fault injection: in-flight + queue rerouted
     STOPPED = "stopped"      # drained and removed from the pool
+
+
+class ReplicaRole(enum.Enum):
+    """Which serving phase(s) a replica executes.
+
+    ``UNIFIED`` replicas run prefill + decode in one batch (the paper's
+    single-worker protocol, and PR-1 cluster behaviour). Under
+    prefill/decode disaggregation, ``PREFILL`` replicas run only prompt
+    processing and hand the request off (modeled KV transfer) to a
+    ``DECODE`` replica, which runs only token generation — so long
+    prefills stop stalling decode batches (arXiv 2602.02987).
+    """
+
+    UNIFIED = "unified"
+    PREFILL = "prefill"
+    DECODE = "decode"
+
+    def can_prefill(self) -> bool:
+        """True when new (not-yet-prefilled) requests may land here."""
+        return self is not ReplicaRole.DECODE
+
+    def can_decode(self) -> bool:
+        """True when prefilled requests may decode here."""
+        return self is not ReplicaRole.PREFILL
 
 
 def _budget(req: Request) -> float:
@@ -47,33 +73,52 @@ def _budget(req: Request) -> float:
 
 
 class Replica:
-    """Base replica: scheduler-backed introspection, no execution."""
+    """Base replica: scheduler-backed introspection, no execution.
 
-    def __init__(self, rid: int, scheduler: DriftScheduler) -> None:
+    All mass quantities are in *estimated budget tokens* (Eq. 1,
+    ``Estimate.t_budget`` from the shared estimator); depths are request
+    counts; times are seconds.
+    """
+
+    def __init__(self, rid: int, scheduler: DriftScheduler,
+                 role: ReplicaRole = ReplicaRole.UNIFIED) -> None:
         self.rid = rid
         self.sched = scheduler
         self.state = ReplicaState.ACTIVE
+        self.role = role
         self.n_routed = 0            # requests the router sent here
         self.n_rerouted_away = 0     # requests moved off after a failure
+        self.n_handoffs_out = 0      # prefills handed off for decode
+        self.n_handoffs_in = 0       # decode work received via handoff
+        self.n_stolen_away = 0       # queued requests stolen by peers
+        self.n_stolen_in = 0         # queued requests stolen from peers
 
     # --- lifecycle ----------------------------------------------------
     def routable(self) -> bool:
+        """True when the router may place new work here (ACTIVE only)."""
         return self.state is ReplicaState.ACTIVE
 
     # --- load introspection (router / autoscaler signals) -------------
     def queued_requests(self) -> List[Request]:
+        """Snapshot of queued (not yet dispatched) requests, in tenant
+        queue order."""
         return list(self.sched.queues.all_requests())
 
     def inflight_requests(self) -> List[Request]:
+        """Requests currently executing on this replica's workers
+        (empty on the base class: no execution backend)."""
         return []
 
     def queue_depth(self) -> int:
+        """Number of queued requests (count, not token mass)."""
         return self.sched.queue_depth()
 
     def queued_token_mass(self) -> float:
+        """Estimated budget tokens (Eq. 1) waiting in the queues."""
         return sum(_budget(r) for r in self.sched.queues.all_requests())
 
     def inflight_token_mass(self) -> float:
+        """Estimated budget tokens (Eq. 1) currently executing."""
         return sum(_budget(r) for r in self.inflight_requests())
 
     def token_mass(self) -> float:
@@ -93,11 +138,15 @@ class Replica:
         return 1 if self.inflight_requests() else 0
 
     def alive_workers(self) -> int:
+        """Workers not currently failed (utilization denominator)."""
         return 1
 
     def is_idle(self) -> bool:
+        """True when nothing is queued or executing — the precondition
+        for this replica to *steal* work from an overloaded peer."""
         return self.queue_depth() == 0 and not self.inflight_requests()
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
-        return (f"Replica(rid={self.rid}, state={self.state.value}, "
+        return (f"Replica(rid={self.rid}, role={self.role.value}, "
+                f"state={self.state.value}, "
                 f"depth={self.queue_depth()}, mass={self.token_mass():.0f})")

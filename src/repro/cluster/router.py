@@ -17,6 +17,15 @@ surface:
 * ``tenant_affinity`` — keeps a tenant's stream on its warm replica
   (stable tenant -> replica mapping), spilling to the least-loaded
   replica when the warm one is overloaded.
+* ``pd_disaggregated`` — two-stage prefill/decode placement over a
+  role-split pool: new requests go to prefill replicas (by prompt-token
+  load), prefilled requests hand off to decode replicas (by estimated
+  budget-token mass) via a modeled KV transfer. See
+  :class:`PDDisaggregatedRouting`.
+
+The router also owns the cross-replica *work-stealing* protocol
+(:meth:`ClusterRouter.plan_steals`): idle replicas take half the queue
+of their most-backlogged role-compatible peer, estimates preserved.
 
 Selection is deterministic: replicas are scanned in ``rid`` order and
 ties break toward the lowest ``rid``.
@@ -31,7 +40,7 @@ from typing import Dict, List, Optional, Sequence
 from ..core.admission import count_tokens
 from ..core.estimator import AdaptiveTokenEstimator
 from ..core.request import Request
-from .replica import Replica, _budget
+from .replica import Replica, ReplicaRole, ReplicaState, _budget
 
 
 class RoutingPolicy:
@@ -41,6 +50,12 @@ class RoutingPolicy:
 
     def select(self, replicas: Sequence[Replica], req: Request,
                est_budget: float, now: float) -> Replica:
+        """Pick one replica from a non-empty routable pool.
+
+        ``est_budget`` is the request's estimated token budget (Eq. 1,
+        prompt + calibrated output estimate from the shared estimator);
+        ``now`` is the simulated/wall-clock time in seconds.
+        """
         raise NotImplementedError
 
 
@@ -54,6 +69,7 @@ class RoundRobinRouting(RoutingPolicy):
         self._cursor = 0
 
     def select(self, replicas, req, est_budget, now):
+        """Next replica in rotation; ignores the estimate entirely."""
         chosen = replicas[self._cursor % len(replicas)]
         self._cursor = (self._cursor + 1) % max(len(replicas), 1)
         return chosen
@@ -65,6 +81,8 @@ class LeastLoadedRouting(RoutingPolicy):
     name = "least_loaded"
 
     def select(self, replicas, req, est_budget, now):
+        """Replica with the least outstanding estimated budget-token
+        mass (Eq. 1, queued + in flight); ties to the lowest rid."""
         return min(replicas, key=lambda r: (r.token_mass(), r.rid))
 
 
@@ -123,6 +141,9 @@ class DriftAwareRouting(RoutingPolicy):
             + sum(k + _budget(q) for q in r.inflight_requests())
 
     def select(self, replicas, req, est_budget, now):
+        """Band placement from the service-weighted CDF position of
+        ``est_budget`` (Eq. 1 tokens), with least-loaded spill when the
+        preferred band replica is overloaded."""
         b = self._bucket(est_budget)
         below = sum(self._weight[:b + 1])
         total = sum(self._weight)
@@ -158,6 +179,8 @@ class TenantAffinityRouting(RoutingPolicy):
         self.spill_factor = float(spill_factor)
 
     def select(self, replicas, req, est_budget, now):
+        """Warm replica for the request's tenant unless its mass
+        (Eq. 1 tokens) exceeds ``spill_factor`` x the routable mean."""
         # ring mapping on stable rids (not pool indices): the warm
         # replica of every other tenant survives membership changes —
         # a failed replica only remaps the tenants it was warming
@@ -169,13 +192,61 @@ class TenantAffinityRouting(RoutingPolicy):
         return min(replicas, key=lambda r: (r.token_mass(), r.rid))
 
 
+class PDDisaggregatedRouting(RoutingPolicy):
+    """Prefill/decode-disaggregated two-stage placement.
+
+    Admitted requests are placed on *prefill-capable* replicas by
+    outstanding prompt-token load (prefill replicas only pay prompt
+    processing, so their load is prompt mass — raw prompt tokens, not
+    Eq. 1 budgets). Once prefill finishes, :meth:`select_decode` places
+    the request on a *decode-capable* replica by outstanding estimated-
+    token mass (Eq. 1 budgets — decode cost is output-length driven,
+    which is exactly what the calibrated estimator predicts). The
+    cluster simulator moves the KV between the two via a modeled
+    transfer delay.
+
+    Separating the pools removes prefill/decode contention: a long
+    prompt no longer stalls the decode batch behind it
+    (arXiv 2602.02987's head-of-line effect).
+    """
+
+    name = "pd_disaggregated"
+
+    @staticmethod
+    def _prompt_load(r: Replica) -> float:
+        """Outstanding prompt tokens (queued + in flight) — the work a
+        prefill replica actually pays for."""
+        return (sum(q.prompt_tokens for q in r.queued_requests())
+                + sum(q.prompt_tokens for q in r.inflight_requests()))
+
+    def select(self, replicas, req, est_budget, now):
+        """Stage 1: least prompt-loaded prefill-capable replica."""
+        pool = [r for r in replicas if r.role.can_prefill()]
+        if not pool:           # degenerate pool (e.g. every prefill
+            pool = replicas    # replica failed): decode pool serves both
+        return min(pool, key=lambda r: (self._prompt_load(r), r.rid))
+
+    def select_decode(self, replicas: Sequence[Replica], req: Request,
+                      est_budget: float, now: float) -> Optional[Replica]:
+        """Stage 2: least-loaded decode-capable replica (estimated
+        budget-token mass, Eq. 1), or None when no decode-capable
+        replica is routable (caller parks the KV and retries)."""
+        pool = [r for r in replicas if r.role.can_decode()]
+        if not pool:
+            return None
+        return min(pool, key=lambda r: (r.token_mass(), r.rid))
+
+
 ROUTING_POLICIES: Dict[str, type] = {
     p.name: p for p in (RoundRobinRouting, LeastLoadedRouting,
-                        DriftAwareRouting, TenantAffinityRouting)
+                        DriftAwareRouting, TenantAffinityRouting,
+                        PDDisaggregatedRouting)
 }
 
 
 def make_routing_policy(name: str, **kwargs) -> RoutingPolicy:
+    """Instantiate a routing policy by registry name (case-insensitive);
+    raises ValueError listing the registry on an unknown name."""
     try:
         cls = ROUTING_POLICIES[name.lower()]
     except KeyError:
@@ -186,13 +257,31 @@ def make_routing_policy(name: str, **kwargs) -> RoutingPolicy:
 
 @dataclass
 class RoutingRecord:
-    """One routing decision (cluster metrics / debugging)."""
+    """One routing decision (cluster metrics / debugging).
+
+    ``stage`` is "admit" for first placement (prefill placement under
+    P/D disaggregation) and "decode" for the post-prefill handoff
+    placement; ``est_budget`` is in estimated budget tokens (Eq. 1)."""
 
     time: float
     req_id: int
     tenant: str
     est_budget: float
     rid: int
+    stage: str = "admit"
+
+
+@dataclass(frozen=True)
+class StealPlan:
+    """One planned work-stealing move: ``n`` queued requests leave
+    replica ``victim_rid`` for the idle replica ``thief_rid``. The owner
+    (cluster simulator) executes the move; for decode-ready work it also
+    pays a fresh KV-transfer delay, since the pages live on the
+    victim."""
+
+    victim_rid: int
+    thief_rid: int
+    n: int
 
 
 class ClusterRouter:
@@ -243,3 +332,77 @@ class ClusterRouter:
                 time=now, req_id=req.req_id, tenant=req.tenant.label,
                 est_budget=est, rid=chosen.rid))
         return chosen
+
+    def route_decode(self, replicas: Sequence[Replica], req: Request,
+                     now: float,
+                     exclude: Sequence[Replica] = ()) -> Optional[Replica]:
+        """Stage-2 placement: pick the decode replica a prefilled
+        request hands off to, or None when no decode-capable replica is
+        routable (the caller parks the KV at its source and retries).
+        Policies without a two-stage story (everything but
+        ``pd_disaggregated``) fall back to :meth:`route`."""
+        pool = [r for r in replicas if r.routable() and r not in exclude]
+        if not pool:
+            return None
+        pool.sort(key=lambda r: r.rid)
+        select_decode = getattr(self.policy, "select_decode", None)
+        if select_decode is None:
+            return self.route(replicas, req, now, exclude=exclude)
+        est = self.price(req)
+        chosen = select_decode(pool, req, est, now)
+        if chosen is None:
+            return None
+        if self._record:
+            self.log.append(RoutingRecord(
+                time=now, req_id=req.req_id, tenant=req.tenant.label,
+                est_budget=est, rid=chosen.rid, stage="decode"))
+        return chosen
+
+    # --- work stealing -------------------------------------------------
+    def plan_steals(self, replicas: Sequence[Replica], now: float, *,
+                    min_victim_depth: int = 4) -> List[StealPlan]:
+        """Cross-replica work stealing: pair every idle routable replica
+        (thief) with its most-backlogged role-compatible peer (victim)
+        and plan to move half the victim's queue (requests, counted —
+        mass-greedy victims are picked by queued estimated-token mass).
+
+        Role compatibility keys off the *phase the victim's queued work
+        needs next*: a decode replica's queue holds prefilled,
+        decode-ready requests, so only decode-capable thieves may take
+        them; prefill and unified queues hold not-yet-prefilled work,
+        so the thief must be prefill-capable. Replicas still DRAINING
+        count as victims (stealing is precisely how their backlog drains
+        faster) but never as thieves. Estimates travel with the stolen
+        requests — stealing must not re-price work.
+        """
+        thieves = sorted((r for r in replicas
+                          if r.routable() and r.is_idle()),
+                         key=lambda r: r.rid)
+        taken: set = set()
+        plans: List[StealPlan] = []
+        for thief in thieves:
+            candidates = [
+                v for v in replicas
+                if v is not thief and v.rid not in taken
+                and v.state in (ReplicaState.ACTIVE, ReplicaState.DRAINING)
+                and v.queue_depth() >= min_victim_depth
+                and self._steal_compatible(v, thief)
+            ]
+            if not candidates:
+                continue
+            victim = max(candidates,
+                         key=lambda v: (v.queued_token_mass(), -v.rid))
+            n = victim.queue_depth() // 2
+            if n <= 0:
+                continue
+            taken.add(victim.rid)
+            plans.append(StealPlan(victim_rid=victim.rid,
+                                   thief_rid=thief.rid, n=n))
+        return plans
+
+    @staticmethod
+    def _steal_compatible(victim: Replica, thief: Replica) -> bool:
+        if victim.role is ReplicaRole.DECODE:
+            return thief.role.can_decode()
+        # prefill / unified queues hold not-yet-prefilled work
+        return thief.role.can_prefill()

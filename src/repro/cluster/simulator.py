@@ -7,8 +7,16 @@ single seed:
 
     arrival -> GlobalAdmission (rate limits, backpressure; shed or pass)
             -> ClusterRouter   (round_robin / least_loaded /
-                                drift_aware / tenant_affinity)
+                                drift_aware / tenant_affinity /
+                                pd_disaggregated)
             -> replica's DriftScheduler -> replica workers
+
+Under ``pd_disaggregated`` routing the lifecycle is two-stage: the
+request prefills on a PREFILL-role replica, its KV moves to a
+DECODE-role replica via a modeled transfer delay, and decode completes
+there (drift feedback fires once, attributed to the decode phase).
+Optional work stealing lets idle replicas take queued work from
+overloaded role-compatible peers at every control tick.
 
 Replica events (batch_start/batch_done/fail/repair) emitted by a
 replica's simulator are routed back through the shared heap via the
@@ -33,24 +41,28 @@ from __future__ import annotations
 import heapq
 import itertools
 import random
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from ..core.estimator import AdaptiveTokenEstimator, DriftConfig
 from ..core.request import Request
 from ..core.scheduler import DriftScheduler
-from ..serving.cost_model import CostModel, L4_QWEN_1_8B
+from ..serving.cost_model import (CostModel, L4_QWEN_1_8B, decode_view,
+                                  prefill_view)
 from ..serving.simulator import SimConfig, WorkerSimulator
 from ..workload.generator import ArrivalPlan
 from .admission import AdmissionConfig, GlobalAdmission
-from .autoscaler import SCALE_DOWN, SCALE_UP, Autoscaler
+from .autoscaler import (SCALE_DOWN, SCALE_UP, Autoscaler, RoleAutoscaler)
 from .metrics import ClusterMetrics, summarize_cluster
-from .replica import Replica, ReplicaState
+from .replica import Replica, ReplicaRole, ReplicaState
 from .router import ClusterRouter, RoutingPolicy
 
 
 @dataclass(frozen=True)
 class ClusterConfig:
+    """Cluster topology + protocol knobs. Times in seconds, masses in
+    estimated budget tokens (Eq. 1), counts in requests/replicas."""
+
     n_replicas: int = 4
     workers_per_replica: int = 1
     routing: str = "drift_aware"
@@ -63,26 +75,62 @@ class ClusterConfig:
     fail_events: Tuple[Tuple[float, int], ...] = ()
     repair_time: float = 30.0
     seed: int = 0
+    # --- P/D disaggregation (active when routing == "pd_disaggregated")
+    # explicit prefill-pool size; None derives it from the fraction
+    n_prefill_replicas: Optional[int] = None
+    pd_prefill_fraction: float = 0.25     # prefill share of the pool
+    # modeled KV-transfer time for one handoff:
+    #   kv_transfer_base + kv_transfer_per_token * prompt_tokens  (s)
+    # ~PCIe/NVLink-era page migration: ms-scale, prompt-length driven
+    kv_transfer_base: float = 0.002
+    kv_transfer_per_token: float = 2e-5
+    # --- cross-replica work stealing (any routing mode)
+    work_stealing: bool = False
+    steal_min_depth: int = 4          # victim queue depth before stealing
+
+
+@dataclass
+class Handoff:
+    """One prefill→decode KV transfer in flight.
+
+    Departs the source (prefill) replica when its prefill batch
+    finishes; arrives ``kv_transfer`` seconds later, at which point the
+    decode replica is chosen and the request enqueued there. If the
+    source replica fails before arrival the KV is lost and the request
+    re-runs prefill (``cancelled`` marks the dead transfer).
+    ``forced_dst_rid`` pins the destination (work stealing re-transfers
+    KV to a specific thief)."""
+
+    req: Request
+    src_rid: int
+    forced_dst_rid: Optional[int] = None
+    stolen: bool = False           # this transfer carries stolen work
+    cancelled: bool = False
 
 
 class SimReplica(Replica):
     """Replica backed by an externally-driven WorkerSimulator."""
 
     def __init__(self, rid: int, scheduler: DriftScheduler,
-                 sim: WorkerSimulator) -> None:
-        super().__init__(rid, scheduler)
+                 sim: WorkerSimulator,
+                 role: ReplicaRole = ReplicaRole.UNIFIED) -> None:
+        super().__init__(rid, scheduler, role=role)
         self.sim = sim
 
     def inflight_requests(self) -> List[Request]:
+        """Requests executing on this replica's workers right now."""
         return self.sim.inflight_requests()
 
     def busy_workers(self) -> int:
+        """Workers mid-batch (numerator of the utilization signal)."""
         return self.sim.n_busy_workers()
 
     def alive_workers(self) -> int:
+        """Non-failed workers (denominator of the utilization signal)."""
         return self.sim.n_alive_workers()
 
     def is_idle(self) -> bool:
+        """True when nothing is queued or in flight here."""
         return self.sim.is_idle()
 
     def accept(self, req: Request, now: float) -> None:
@@ -98,9 +146,35 @@ class SimReplica(Replica):
         self.sched.queues.enqueue(req, req.enqueue_time, front=True)
         self.sim.handle_event(now, "kick", None)
 
+    def accept_handoff(self, req: Request, now: float, *,
+                       record: bool = True) -> None:
+        """Receive a prefilled request whose KV transfer just landed
+        (P/D path, stage 2). Joins the back of its tenant queue with the
+        original enqueue timestamp (FIFO ordering stays admission-
+        ordered); the admission estimate travels untouched — decode
+        placement already consumed it, and bias feedback fires only at
+        decode completion. ``record=False`` skips the ``n_handoffs_in``
+        credit (stolen re-transfers count under the steal counters
+        instead, keeping handoff in/out conservation exact)."""
+        if record:
+            self.n_handoffs_in += 1
+        self.sched.queues.enqueue(req, req.enqueue_time)
+        self.sim.handle_event(now, "kick", None)
+
+    def accept_steal(self, req: Request, now: float) -> None:
+        """Receive a queued request stolen from an overloaded peer.
+        Estimate and enqueue timestamp preserved (stealing must not
+        re-price or re-order work it moves)."""
+        self.n_stolen_in += 1
+        self.sched.queues.enqueue(req, req.enqueue_time)
+        self.sim.handle_event(now, "kick", None)
+
 
 @dataclass
 class ClusterTelemetry:
+    """One control-tick sample: active/starting replica counts, total
+    queued estimated-token mass (Eq. 1), busy/alive utilization."""
+
     time: float
     n_active: int
     n_starting: int
@@ -109,7 +183,18 @@ class ClusterTelemetry:
 
 
 class ClusterSimulator:
-    """One event loop over N replicas, a router, and a front door."""
+    """One event loop over N replicas, a router, and a front door.
+
+    With ``routing="pd_disaggregated"`` the pool is role-split and the
+    request lifecycle becomes the two-stage pipeline::
+
+        admit -> prefill replica -> (KV transfer) -> decode replica
+              -> complete (drift feedback, attributed to "decode")
+
+    With ``work_stealing=True`` idle replicas additionally steal half
+    the queue of their most-backlogged role-compatible peer at every
+    control tick (decode-ready work pays a fresh KV transfer).
+    """
 
     def __init__(self, plan: ArrivalPlan,
                  config: Optional[ClusterConfig] = None,
@@ -127,25 +212,70 @@ class ClusterSimulator:
         self.autoscaler = autoscaler
         self.router = ClusterRouter(routing or self.cfg.routing,
                                     self.estimator)
+        self.pd_mode = self.router.policy.name == "pd_disaggregated"
         self.replicas: List[SimReplica] = []
         self.telemetry: List[ClusterTelemetry] = []
         self.n_rerouted = 0
+        self.n_handoffs = 0            # prefill→decode transfers initiated
+        self.n_handoffs_lost = 0       # transfers cancelled by src failure
+        self.n_stolen = 0              # requests moved by work stealing
         self.completed_total = 0
         self.phase_boundary = 0.0
+        self._in_transit: Dict[int, Handoff] = {}   # req_id -> live handoff
         self._events: List[tuple] = []
         self._eseq = itertools.count()
         self._rid_seq = itertools.count()
-        for _ in range(self.cfg.n_replicas):
-            self._provision_replica(ReplicaState.ACTIVE)
+        roles = self._initial_roles()
+        # the pool shape actually built — handed to a RoleAutoscaler
+        # whose config leaves target_prefill_fraction unset, so scaling
+        # never fights a non-default initial split
+        self._pd_target_fraction: Optional[float] = (
+            roles.count(ReplicaRole.PREFILL) / len(roles)
+            if self.pd_mode else None)
+        for role in roles:
+            self._provision_replica(ReplicaState.ACTIVE, role)
+
+    def _initial_roles(self) -> List[ReplicaRole]:
+        """Pool shape at t=0: all UNIFIED, or the P/D split (at least
+        one prefill and one decode replica; prefill replicas get the
+        low rids)."""
+        n = self.cfg.n_replicas
+        if not self.pd_mode:
+            return [ReplicaRole.UNIFIED] * n
+        if n < 2:
+            raise ValueError("pd_disaggregated needs >= 2 replicas "
+                             "(one prefill + one decode)")
+        n_prefill = self.cfg.n_prefill_replicas
+        if n_prefill is None:
+            n_prefill = round(n * self.cfg.pd_prefill_fraction)
+        n_prefill = min(max(n_prefill, 1), n - 1)
+        return ([ReplicaRole.PREFILL] * n_prefill
+                + [ReplicaRole.DECODE] * (n - n_prefill))
 
     # ------------------------------------------------------------------
     def _push(self, t: float, kind: str, payload=None) -> None:
         heapq.heappush(self._events, (t, next(self._eseq), kind, payload))
 
-    def _provision_replica(self, state: ReplicaState) -> SimReplica:
+    def _provision_replica(self, state: ReplicaState,
+                           role: ReplicaRole = ReplicaRole.UNIFIED
+                           ) -> SimReplica:
+        """Create one replica (shared estimator, shared heap, shared
+        seed) with a phase-scoped cost model and completion behaviour
+        matching its role: prefill replicas hand finished prefills off
+        instead of completing them; decode replicas attribute drift
+        feedback to the "decode" phase."""
         rid = next(self._rid_seq)
         sched = DriftScheduler(policy=self.cfg.scheduler_policy,
                                estimator=self.estimator)
+        cost = self.cost
+        hook = None
+        if role is ReplicaRole.PREFILL:
+            cost = prefill_view(self.cost)
+            hook = (lambda req, now, rid=rid:
+                    self._on_prefill_done(rid, req, now))
+        elif role is ReplicaRole.DECODE:
+            cost = decode_view(self.cost)
+            sched.feedback_phase = "decode"
         sim = WorkerSimulator(
             sched,
             config=SimConfig(
@@ -154,11 +284,12 @@ class ClusterSimulator:
                 n_workers=self.cfg.workers_per_replica,
                 repair_time=self.cfg.repair_time,
                 seed=self.cfg.seed),
-            cost_model=self.cost,
+            cost_model=cost,
             sink=lambda t, kind, payload, rid=rid:
                 self._push(t, "replica", (rid, kind, payload)),
-            rng=self.rng)
-        rep = SimReplica(rid, sched, sim)
+            rng=self.rng,
+            complete_hook=hook)
+        rep = SimReplica(rid, sched, sim, role=role)
         rep.state = state
         self.replicas.append(rep)
         return rep
@@ -171,11 +302,19 @@ class ClusterSimulator:
         return self.completed_total + self._n_shed()
 
     def cluster_token_mass(self) -> float:
-        return sum(r.token_mass() for r in self.replicas
-                   if r.state is not ReplicaState.STOPPED)
+        """Outstanding estimated work (Eq. 1 budgets) across the whole
+        cluster: queued + executing on live replicas, plus requests
+        whose KV is mid-transfer between prefill and decode replicas
+        (they are nowhere else, but their work is still owed)."""
+        from .replica import _budget
+        return (sum(r.token_mass() for r in self.replicas
+                    if r.state is not ReplicaState.STOPPED)
+                + sum(_budget(h.req) for h in self._in_transit.values()))
 
     # ------------------------------------------------------------------
     def run(self) -> ClusterMetrics:
+        """Drive the whole cluster to completion (every request
+        completed or shed, or ``max_time`` reached) and summarize."""
         cfg = self.cfg
         n_start = cfg.n_replicas
         n_cal = len(self.plan.calibration)
@@ -205,6 +344,8 @@ class ClusterSimulator:
             elif kind == "replica":
                 rid, rkind, rpayload = payload
                 self._on_replica_event(rid, rkind, rpayload, now)
+            elif kind == "handoff":
+                self._on_handoff(payload, now)
             elif kind == "replica_fail":
                 self._fail_replica(payload, now)
             elif kind == "replica_ready":
@@ -238,50 +379,167 @@ class ClusterSimulator:
 
     def _on_replica_event(self, rid: int, rkind: str, rpayload,
                           now: float) -> None:
+        """Forward one replica-emitted event (batch_start / batch_done /
+        fail / repair / kick) back into its WorkerSimulator and count
+        any completions it produced. Prefill-phase finishes are
+        intercepted by the completion hook and never count here."""
         rep = self.replicas[rid]
         if rkind == "repair" and rep.state is ReplicaState.FAILED:
             rep.state = ReplicaState.ACTIVE
         self.completed_total += rep.sim.handle_event(now, rkind, rpayload)
 
+    # --- P/D two-stage lifecycle ---------------------------------------
+    def _on_prefill_done(self, rid: int, req: Request, now: float) -> bool:
+        """Completion hook on prefill replicas: the batch finished means
+        the *prefill phase* finished — stamp TTFT, start the modeled KV
+        transfer, and tell the WorkerSimulator the request was taken
+        over (no ``sched.complete``, so no drift feedback: the prefill
+        phase observes no output length)."""
+        req.prefill_end = now
+        req.prefill_rid = rid
+        rep = self.replicas[rid]
+        rep.n_handoffs_out += 1
+        self.n_handoffs += 1
+        h = Handoff(req=req, src_rid=rid)
+        self._in_transit[req.req_id] = h
+        self._push(now + self._kv_delay(req), "handoff", h)
+        return True
+
+    def _kv_delay(self, req: Request) -> float:
+        """Modeled KV-transfer time (s): base link cost + per-prompt-
+        token page movement."""
+        return (self.cfg.kv_transfer_base
+                + self.cfg.kv_transfer_per_token * req.prompt_tokens)
+
+    def _on_handoff(self, h: Handoff, now: float) -> None:
+        """A KV transfer arrived: place the prefilled request on a
+        decode replica. Cancelled transfers (source replica died in
+        flight — KV lost) were already rerouted by the failure path.
+        A stolen transfer is pinned to its thief when still routable;
+        with no decode-capable replica up, the KV waits at the source
+        and retries."""
+        if h.cancelled:
+            return
+        self._in_transit.pop(h.req.req_id, None)
+        dst: Optional[Replica] = None
+        if h.forced_dst_rid is not None:
+            cand = self.replicas[h.forced_dst_rid]
+            if cand.routable():
+                dst = cand
+        if dst is None:
+            dst = self.router.route_decode(self.replicas, h.req, now)
+        if dst is None:
+            # no decode-capable replica routable: KV stays at the
+            # source; retry while the pool recovers (source failure
+            # meanwhile cancels the handoff and forces re-prefill)
+            self._in_transit[h.req.req_id] = h
+            self._push(now + 1.0, "handoff", h)
+            return
+        h.req.handoff_time = now
+        h.req.decode_rid = dst.rid
+        if h.stolen:
+            dst.n_stolen_in += 1   # credited where the work landed
+        dst.accept_handoff(h.req, now, record=not h.stolen)
+
+    # --- work stealing -------------------------------------------------
+    def _run_steals(self, now: float) -> None:
+        """Execute the router's steal plans: move the tail (coldest,
+        lowest-tier end — ``TenantQueueManager.drain`` yields premium
+        first) of each victim's queue to its idle thief. Not-yet-
+        prefilled work moves instantly; decode-ready work pays a fresh
+        KV transfer from the victim (the pages live there)."""
+        for plan in self.router.plan_steals(
+                self.replicas, now, min_victim_depth=self.cfg.steal_min_depth):
+            victim = self.replicas[plan.victim_rid]
+            thief = self.replicas[plan.thief_rid]
+            queued = victim.sched.queues.drain()
+            keep, stolen = queued[:len(queued) - plan.n], \
+                queued[len(queued) - plan.n:]
+            for req in keep:
+                victim.sched.queues.enqueue(req, req.enqueue_time)
+            for req in stolen:
+                req.n_steals += 1
+                victim.n_stolen_away += 1
+                self.n_stolen += 1
+                if req.prefill_end is not None:
+                    # decode-ready: the KV re-transfers from the victim;
+                    # n_stolen_in is credited at delivery (the planned
+                    # thief may become unroutable mid-transfer)
+                    h = Handoff(req=req, src_rid=victim.rid,
+                                forced_dst_rid=thief.rid, stolen=True)
+                    self._in_transit[req.req_id] = h
+                    self._push(now + self._kv_delay(req), "handoff", h)
+                else:
+                    thief.accept_steal(req, now)
+
+    # --- failure handling ----------------------------------------------
     def _fail_replica(self, rid: int, now: float) -> None:
+        """Role-aware replica failure.
+
+        1. In-flight batches abort (estimates preserved, no bias
+           feedback — the at-most-once contract) and land back at the
+           head of the replica's own queue.
+        2. KV transfers *sourced* at the dead replica are lost: those
+           requests re-run prefill elsewhere (estimate kept, feedback
+           never fired, so nothing double-counts).
+        3. The stranded queue reroutes to surviving replicas. Work that
+           had already prefilled lost its KV with the replica, so it
+           resets to the pre-prefill state and rejoins via stage-1
+           routing (prefill-capable pool under P/D).
+        """
         rep = self.replicas[rid]
         if rep.state in (ReplicaState.STOPPED, ReplicaState.FAILED):
             return
         rep.state = ReplicaState.FAILED
-        # abort in-flight batches: estimates preserved, no bias feedback,
-        # requests land back at the head of the replica's own queue
+        # (2) cancel in-transit handoffs whose KV source died
+        for h in [h for h in self._in_transit.values()
+                  if h.src_rid == rid]:
+            h.cancelled = True
+            del self._in_transit[h.req.req_id]
+            self.n_handoffs_lost += 1
+            if h.stolen:
+                # an undelivered steal never happened: unwind the
+                # take-side accounting so the flow counters balance
+                h.req.n_steals -= 1
+                rep.n_stolen_away -= 1
+                self.n_stolen -= 1
+            h.req.reset_for_reprefill()
+            self._reroute_stranded(rep, h.req, now)
+        # (1) abort in-flight batches
         for wid in range(len(rep.sim.workers)):
             rep.sim.handle_event(now, "fail", wid)
-        # then reroute the whole stranded queue to surviving replicas
+        # (3) reroute the whole stranded queue to surviving replicas
         stranded = rep.sched.queues.drain()
         for req in reversed(stranded):      # front-pushes: keep order
-            target = self.router.route(self.replicas, req, now,
-                                       exclude=(rep,))
-            if target is None:
-                # total outage: park on the failed replica, served
-                # after its repair
-                rep.sched.queues.enqueue(req, req.enqueue_time, front=True)
-                continue
-            rep.n_rerouted_away += 1
-            self.n_rerouted += 1
-            target.accept_reroute(req, now)
+            if req.prefill_end is not None:
+                req.reset_for_reprefill()   # KV died with the replica
+            self._reroute_stranded(rep, req, now)
+
+    def _reroute_stranded(self, rep: SimReplica, req: Request,
+                          now: float) -> None:
+        """Route one stranded request off ``rep``; with the whole pool
+        down it parks on the failed replica and is served after
+        repair."""
+        target = self.router.route(self.replicas, req, now, exclude=(rep,))
+        if target is None:
+            rep.sched.queues.enqueue(req, req.enqueue_time, front=True)
+            return
+        rep.n_rerouted_away += 1
+        self.n_rerouted += 1
+        target.accept_reroute(req, now)
 
     def _control(self, now: float) -> None:
+        """Control-plane tick (every ``control_interval`` s): finish
+        draining replicas, run work stealing, then let the autoscaler
+        act (role-aware when a :class:`RoleAutoscaler` drives a P/D
+        pool)."""
         for rep in self.replicas:
             if rep.state is ReplicaState.DRAINING and rep.is_idle():
                 rep.state = ReplicaState.STOPPED
+        if self.cfg.work_stealing:
+            self._run_steals(now)
         if self.autoscaler is not None:
-            n_starting = sum(1 for r in self.replicas
-                             if r.state is ReplicaState.STARTING)
-            action = self.autoscaler.decide(now, self.replicas, n_starting)
-            if action == SCALE_UP:
-                rep = self._provision_replica(ReplicaState.STARTING)
-                self._push(now + self.autoscaler.cfg.startup_delay,
-                           "replica_ready", rep.rid)
-            elif action == SCALE_DOWN:
-                target = self.autoscaler.pick_drain_target(self.replicas)
-                if target is not None:
-                    target.state = ReplicaState.DRAINING
+            self._autoscale(now)
         mass, util, n_active = Autoscaler.signals(self.replicas)
         self.telemetry.append(ClusterTelemetry(
             time=now, n_active=n_active,
@@ -289,8 +547,61 @@ class ClusterSimulator:
                            if r.state is ReplicaState.STARTING),
             queue_mass=mass, utilization=util))
 
+    def _autoscale(self, now: float) -> None:
+        """One autoscaler decision. A RoleAutoscaler on a P/D pool
+        scales each role pool separately; otherwise whole-pool scaling
+        (new replicas join as DECODE in P/D mode — the larger,
+        output-length-bound pool — and UNIFIED elsewhere)."""
+        starting = [r for r in self.replicas
+                    if r.state is ReplicaState.STARTING]
+        if self.pd_mode and isinstance(self.autoscaler, RoleAutoscaler):
+            by_role: Dict[ReplicaRole, int] = {}
+            for r in starting:
+                by_role[r.role] = by_role.get(r.role, 0) + 1
+            decision = self.autoscaler.decide_role(
+                now, self.replicas, by_role,
+                default_target=self._pd_target_fraction)
+            if decision is None:
+                return
+            action, role = decision
+            if action == SCALE_UP:
+                rep = self._provision_replica(ReplicaState.STARTING, role)
+                self._push(now + self.autoscaler.cfg.startup_delay,
+                           "replica_ready", rep.rid)
+            else:
+                target = self.autoscaler.pick_drain_target(self.replicas,
+                                                           role=role)
+                if target is not None:
+                    target.state = ReplicaState.DRAINING
+            return
+        action = self.autoscaler.decide(now, self.replicas, len(starting))
+        if action == SCALE_UP:
+            role = (ReplicaRole.DECODE if self.pd_mode
+                    else ReplicaRole.UNIFIED)
+            rep = self._provision_replica(ReplicaState.STARTING, role)
+            self._push(now + self.autoscaler.cfg.startup_delay,
+                       "replica_ready", rep.rid)
+        elif action == SCALE_DOWN:
+            target = self.autoscaler.pick_drain_target(self.replicas)
+            if target is not None and not self._last_of_role(target):
+                target.state = ReplicaState.DRAINING
+
+    def _last_of_role(self, target: SimReplica) -> bool:
+        """In P/D mode a role pool must never drain to zero: losing the
+        last prefill replica would silently degrade stage-1 routing to
+        the decode-pool fallback (prompt cost unmodeled, no handoffs)
+        for the rest of the run. RoleAutoscaler guards this itself;
+        this check protects the plain-Autoscaler path."""
+        if not self.pd_mode:
+            return False
+        return sum(1 for r in self.replicas
+                   if r.state is ReplicaState.ACTIVE
+                   and r.role is target.role) <= 1
+
     # ------------------------------------------------------------------
     def _summarize(self, n_start: int) -> ClusterMetrics:
+        """Collect completions across replicas (stable completion-time
+        order) and aggregate into :class:`ClusterMetrics`."""
         completed: List[Request] = []
         busy: Dict[int, float] = {}
         done: Dict[int, int] = {}
@@ -308,4 +619,6 @@ class ClusterSimulator:
             replicas=self.replicas, admission=self.admission,
             autoscaler=self.autoscaler, n_replicas_start=n_start,
             replica_busy_time=busy, replica_completed=done,
-            n_failed_dispatches=n_failed, n_rerouted=self.n_rerouted)
+            n_failed_dispatches=n_failed, n_rerouted=self.n_rerouted,
+            n_handoffs=self.n_handoffs, n_handoffs_lost=self.n_handoffs_lost,
+            n_stolen=self.n_stolen)

@@ -31,6 +31,9 @@ class DriftSample:
     observed_output: float
     t_budget: float
     prompt_tokens: int
+    # serving phase that observed the output length ("unified", or
+    # "decode" when a P/D decode replica saw the request finish)
+    phase: str = "unified"
 
     @property
     def error(self) -> float:
@@ -61,7 +64,8 @@ class DriftTracker:
     def __init__(self) -> None:
         self.samples: List[DriftSample] = []
 
-    def record(self, req: Request, now: float) -> DriftSample:
+    def record(self, req: Request, now: float,
+               phase: str = "unified") -> DriftSample:
         if req.estimate is None or req.observed_output_tokens is None:
             raise ValueError(f"request {req.req_id} incomplete for drift record")
         s = DriftSample(
@@ -71,6 +75,7 @@ class DriftTracker:
             observed_output=float(req.observed_output_tokens),
             t_budget=req.estimate.t_budget,
             prompt_tokens=req.prompt_tokens,
+            phase=phase,
         )
         self.samples.append(s)
         return s

@@ -101,6 +101,16 @@ class Request:
     worker_id: Optional[int] = None
     retries: int = 0                 # re-dispatches after worker failure
 
+    # --- phase-disaggregated lifecycle (cluster P/D serving) ---
+    # All timestamps in the same simulated/wall-clock seconds as above.
+    # Unset (None) on the unified path, where one batch covers both
+    # phases and ``exec_end`` is the only completion anchor.
+    prefill_end: Optional[float] = None     # prefill phase finished (TTFT)
+    handoff_time: Optional[float] = None    # KV landed on the decode replica
+    prefill_rid: Optional[int] = None       # replica that ran prefill
+    decode_rid: Optional[int] = None        # replica that ran decode
+    n_steals: int = 0                # times moved by cross-replica stealing
+
     # monotone admission sequence number, assigned by the scheduler; used
     # for FIFO / tie-breaking so ordering is fully deterministic.
     seq: int = -1
@@ -135,6 +145,40 @@ class Request:
             return None
         return self.exec_end - self.exec_start
 
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token, seconds since arrival.
+
+        On the P/D-disaggregated path this is the end of the prefill
+        phase (the first output token exists once prefill has run). On
+        the unified path the cost model is batch-atomic — the first
+        token is only observable at batch end — so TTFT degrades to the
+        batch completion time. That asymmetry is the honest one: it is
+        exactly the TTFT head-of-line damage disaggregation removes.
+        """
+        end = self.prefill_end if self.prefill_end is not None else self.exec_end
+        if end is None:
+            return None
+        return end - self.arrival_time
+
+    @property
+    def decode_latency(self) -> Optional[float]:
+        """Decode-phase latency, seconds: KV arrival on the decode
+        replica to completion (decode queueing + decode execution).
+        None on the unified path, where the batch-atomic cost model
+        cannot split the two phases."""
+        if self.completion_time is None or self.handoff_time is None:
+            return None
+        return self.completion_time - self.handoff_time
+
+    @property
+    def kv_transfer_latency(self) -> Optional[float]:
+        """Modeled prefill→decode KV-transfer time, seconds (includes
+        any re-targeting retries). None outside the P/D path."""
+        if self.handoff_time is None or self.prefill_end is None:
+            return None
+        return self.handoff_time - self.prefill_end
+
     def mark_completed(self, observed_tokens: int, now: float) -> None:
         self.observed_output_tokens = int(observed_tokens)
         self.completion_time = now
@@ -148,3 +192,17 @@ class Request:
         self.exec_end = None
         self.worker_id = None
         self.state = RequestState.QUEUED
+
+    def reset_for_reprefill(self) -> None:
+        """Re-run the prefill phase from scratch.
+
+        Used when the KV produced by a finished prefill is lost before
+        decode completes — the prefill replica died mid-transfer, or the
+        decode replica holding the pages failed. The admission estimate
+        is deliberately kept (at-most-once feedback: nothing was
+        observed yet, so nothing may be re-priced)."""
+        self.reset_for_retry()
+        self.prefill_end = None
+        self.handoff_time = None
+        self.prefill_rid = None
+        self.decode_rid = None

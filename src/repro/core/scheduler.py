@@ -55,6 +55,13 @@ class DriftScheduler:
         self.drift = DriftTracker()
         self.completed: List[Request] = []
         self.dispatched = 0
+        # Which serving phase this scheduler's completions observe
+        # ("unified", or "decode" on a P/D decode replica — the phase
+        # that actually sees the final output length). Used to attribute
+        # drift feedback; prefill replicas never call complete().
+        self.feedback_phase = "unified"
+        # per-phase count of bias-feedback events (at-most-once audit)
+        self.phase_feedback_counts: Dict[str, int] = {}
 
     # --- lifecycle ------------------------------------------------------
     def submit(self, req: Request, now: float) -> Request:
@@ -79,11 +86,24 @@ class DriftScheduler:
             out.append(req)
         return out
 
-    def complete(self, req: Request, observed_tokens: int, now: float) -> DriftSample:
-        """Runtime feedback (Sec. II-J): record drift, update bias."""
+    def complete(self, req: Request, observed_tokens: int, now: float,
+                 phase: Optional[str] = None) -> DriftSample:
+        """Runtime feedback (Sec. II-J): record drift, update bias.
+
+        ``phase`` attributes the observation to the serving phase that
+        produced it ("unified" single-stage serving, "decode" on a P/D
+        decode replica); defaults to this scheduler's
+        :attr:`feedback_phase`. Attribution matters for the at-most-once
+        contract: in disaggregated serving only the phase that observes
+        the final output length (decode) may feed the bias EMA —
+        a prefill pass observes no output drift and must stay silent.
+        """
+        phase = phase or self.feedback_phase
         req.mark_completed(observed_tokens, now)
-        sample = self.drift.record(req, now)
+        sample = self.drift.record(req, now, phase=phase)
         self.estimator.feedback(req.category, float(observed_tokens), now)
+        self.phase_feedback_counts[phase] = \
+            self.phase_feedback_counts.get(phase, 0) + 1
         self.completed.append(req)
         return sample
 

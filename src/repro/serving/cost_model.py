@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import json
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Iterable, Optional
 
 from ..core.request import Request
@@ -90,6 +90,24 @@ L4_MAX_DRIVEN = CostModel(
     c_decode_max=9.0e-3,
     c_decode_sum=1.5e-4,
 )
+
+
+def prefill_view(cost: CostModel) -> CostModel:
+    """Phase-scoped view for a P/D *prefill* replica: a batch there only
+    pays launch overhead + prompt processing. Decode coefficients are
+    zeroed, so batch time is independent of output lengths — which the
+    prefill stage never produces."""
+    return replace(cost, name=cost.name + "+prefill",
+                   c_decode_max=0.0, c_decode_sum=0.0)
+
+
+def decode_view(cost: CostModel) -> CostModel:
+    """Phase-scoped view for a P/D *decode* replica: prompt tokens were
+    already prefilled elsewhere (the KV arrives via the modeled
+    transfer), so only launch overhead + decode terms remain. Both
+    phases keep ``t_base``: disaggregation pays two batch launches per
+    request — that overhead is part of its price."""
+    return replace(cost, name=cost.name + "+decode", c_prefill=0.0)
 
 
 def from_roofline(path: str, *, batch_capacity: int = 32,

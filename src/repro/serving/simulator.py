@@ -97,8 +97,19 @@ class WorkerSimulator:
                  config: Optional[SimConfig] = None,
                  cost_model: Optional[CostModel] = None,
                  sink: Optional[Callable[[float, str, object], None]] = None,
-                 rng: Optional[random.Random] = None) -> None:
+                 rng: Optional[random.Random] = None,
+                 complete_hook: Optional[
+                     Callable[[Request, float], bool]] = None) -> None:
+        """``complete_hook(req, now) -> bool``, when given, is consulted
+        as each request's batch finishes: returning True means the owner
+        took the request over (e.g. a P/D prefill replica handing the
+        prefilled request off for decode elsewhere) and the normal
+        completion path — ``sched.complete`` and its drift feedback —
+        must not run for it. Disables hedged dispatch: intercepted
+        requests never reach COMPLETED inside this simulator, so the
+        hedge-loser no-op guard cannot work."""
         self.sched = scheduler
+        self._complete_hook = complete_hook
         self.plan = plan
         self.cfg = config or SimConfig()
         self.cost = cost_model or L4_QWEN_1_8B
@@ -274,6 +285,12 @@ class WorkerSimulator:
         """Speculatively re-execute overdue batches on idle workers."""
         if not self.cfg.hedge:
             return
+        if self._complete_hook is not None:
+            # hedging relies on the COMPLETED-state guard to make the
+            # losing copy a no-op; hook-intercepted requests never reach
+            # COMPLETED here, so a hedge would fire the hook twice
+            # (double handoff -> double feedback). Mutually exclusive.
+            return
         idle = [i for i, w in enumerate(self.workers)
                 if w.alive and w.idle]
         if not idle:
@@ -308,6 +325,9 @@ class WorkerSimulator:
         for r in reqs:
             if r.state is RequestState.COMPLETED:
                 continue               # the other copy won the hedge race
+            if self._complete_hook is not None \
+                    and self._complete_hook(r, now):
+                continue               # owner intercepted (phase handoff)
             if r.worker_id != wid:
                 hedge_win = True       # we are the speculative copy
             r.exec_end = now

@@ -1,12 +1,14 @@
 """Cluster serving layer: routing, admission, autoscaling, failure
-rerouting, and end-to-end determinism (jax-free — simulator only)."""
+rerouting, P/D disaggregation, work stealing, and end-to-end
+determinism (jax-free — simulator only)."""
 
 import pytest
 
 from repro.cluster import (AdmissionConfig, Autoscaler, AutoscalerConfig,
                            ClusterConfig, ClusterRouter, ClusterSimulator,
-                           GlobalAdmission, ReplicaState, TokenBucket,
-                           make_routing_policy)
+                           GlobalAdmission, ReplicaRole, ReplicaState,
+                           RoleAutoscaler, RoleAutoscalerConfig,
+                           TokenBucket, make_routing_policy)
 from repro.cluster.simulator import SimReplica
 from repro.core.estimator import AdaptiveTokenEstimator, DriftConfig
 from repro.core.request import Category, Request, TenantTier
@@ -280,6 +282,185 @@ def test_cluster_admission_sheds_and_accounts():
     # shed requests were never admitted anywhere
     assert all(rec.reason in ("rate_limited", "backpressure")
                for rec in adm.shed_log)
+
+
+# --- P/D disaggregation ------------------------------------------------
+
+def _pd_run(seed=1, n=4, total=300, **cfg_kw):
+    cfg_kw.setdefault("routing", "pd_disaggregated")
+    cfg = ClusterConfig(n_replicas=n, seed=seed, **cfg_kw)
+    return _run(seed=seed, n=n, total=total, config=cfg)
+
+
+def test_pd_two_stage_lifecycle_completes_everything():
+    sim, m = _pd_run()
+    assert m.run.n_completed == 300
+    roles = [r.role for r in sim.replicas]
+    assert roles.count(ReplicaRole.PREFILL) == 1      # 25% of 4, min 1
+    assert roles.count(ReplicaRole.DECODE) == 3
+    # every request prefilled on a prefill replica and decoded elsewhere
+    assert m.n_handoffs == 300
+    done = [r for rep in sim.replicas for r in rep.sched.completed]
+    assert all(r.prefill_end is not None and r.handoff_time is not None
+               and r.prefill_rid != r.decode_rid for r in done)
+    # TTFT is the prefill-phase anchor: strictly before completion
+    assert all(r.ttft < r.e2e_latency for r in done)
+    # KV transfer delay is the modeled base + per-prompt-token cost
+    r = done[0]
+    assert r.kv_transfer_latency == pytest.approx(
+        sim.cfg.kv_transfer_base
+        + sim.cfg.kv_transfer_per_token * r.prompt_tokens)
+
+
+def test_pd_feedback_fires_once_attributed_to_decode():
+    sim, m = _pd_run()
+    # at-most-once: one bias update per completed request
+    assert sum(sim.estimator.bias_store.update_counts().values()) == 300
+    phases = {}
+    for rep in sim.replicas:
+        for k, v in rep.sched.phase_feedback_counts.items():
+            phases[k] = phases.get(k, 0) + v
+    assert phases == {"decode": 300}
+    # drift samples carry the observing phase too
+    samples = [s for rep in sim.replicas for s in rep.sched.drift.samples]
+    assert len(samples) == 300
+    assert all(s.phase == "decode" for s in samples)
+
+
+def test_pd_prefill_failure_mid_handoff_no_double_feedback():
+    """Kill the (single) prefill replica while KV transfers are in
+    flight: the lost transfers re-run prefill elsewhere, nothing is
+    lost, and bias feedback still fires exactly once per request."""
+    sim, m = _pd_run(kv_transfer_base=3.0,      # widen the in-flight window
+                     fail_events=((2.0, 0),), repair_time=20.0)
+    assert sim.replicas[0].role is ReplicaRole.PREFILL
+    assert m.run.n_completed == 300
+    assert m.n_handoffs_lost > 0                 # transfers actually died
+    assert sum(sim.estimator.bias_store.update_counts().values()) == 300
+    # the re-prefilled requests record the recovery (retries reset path)
+    done = [r for rep in sim.replicas for r in rep.sched.completed]
+    assert any(r.retries > 0 for r in done)
+
+
+def test_pd_decode_failure_reprefills_stranded_kv():
+    """A failed decode replica takes its KV pages with it: stranded
+    decode-ready work resets to the pre-prefill state and re-enters
+    stage-1 routing. More handoffs than requests prove the re-runs."""
+    sim, m = _pd_run(fail_events=((15.0, 2),), repair_time=25.0)
+    assert sim.replicas[2].role is ReplicaRole.DECODE
+    assert m.run.n_completed == 300
+    assert m.n_rerouted > 0
+    assert m.n_handoffs > 300
+    assert sum(sim.estimator.bias_store.update_counts().values()) == 300
+
+
+def test_pd_determinism_same_seed_same_numbers():
+    _, a = _pd_run(seed=3, work_stealing=True)
+    _, b = _pd_run(seed=3, work_stealing=True)
+    assert a.as_dict() == b.as_dict()
+
+
+# --- work stealing ------------------------------------------------------
+
+def test_plan_steals_pairs_idle_thief_with_loaded_victim():
+    est, reps = _replicas(3)
+    router = ClusterRouter("least_loaded", est)
+    for _ in range(8):
+        reps[0].sched.submit(_req(), now=0.0)
+    plans = router.plan_steals(reps, now=0.0, min_victim_depth=4)
+    # two idle thieves, one victim: only the first thief gets the plan
+    assert len(plans) == 1
+    assert plans[0].victim_rid == 0 and plans[0].thief_rid == 1
+    assert plans[0].n == 4                      # half the queue
+    # below the depth floor: no stealing
+    est2, reps2 = _replicas(2)
+    router2 = ClusterRouter("least_loaded", est2)
+    for _ in range(3):
+        reps2[0].sched.submit(_req(), now=0.0)
+    assert router2.plan_steals(reps2, now=0.0, min_victim_depth=4) == []
+
+
+def test_steals_respect_roles():
+    est, reps = _replicas(3)
+    reps[0].role = ReplicaRole.DECODE           # victim holds decode work
+    reps[1].role = ReplicaRole.PREFILL          # cannot take decode work
+    reps[2].role = ReplicaRole.DECODE
+    router = ClusterRouter("least_loaded", est)
+    for _ in range(8):
+        reps[0].sched.submit(_req(), now=0.0)
+    plans = router.plan_steals(reps, now=0.0, min_victim_depth=4)
+    assert [p.thief_rid for p in plans] == [2]
+
+
+def test_stealing_preserves_estimates_and_order_metadata():
+    sim, m = _pd_run(work_stealing=True, steal_min_depth=2,
+                     fail_events=((15.0, 2),), repair_time=25.0)
+    assert m.run.n_completed == 300
+    assert m.n_stolen > 0
+    done = [r for rep in sim.replicas for r in rep.sched.completed]
+    stolen = [r for r in done if r.n_steals > 0]
+    assert stolen
+    # stealing must not re-price: the admission estimate survived the
+    # move (estimates are assigned exactly once, at admission)
+    assert all(r.estimate is not None for r in stolen)
+    assert sum(sim.estimator.bias_store.update_counts().values()) == 300
+    # flow conservation on the counters
+    assert sum(rep.n_stolen_in for rep in sim.replicas) == \
+        sum(rep.n_stolen_away for rep in sim.replicas) == m.n_stolen
+
+
+# --- role-aware autoscaler ----------------------------------------------
+
+def test_role_autoscaler_scales_overloaded_role_up():
+    cfg = RoleAutoscalerConfig(min_replicas=2, max_replicas=6,
+                               up_queue_mass_per_replica=1000.0,
+                               down_queue_mass_per_replica=100.0,
+                               cooldown=10.0)
+    scaler = RoleAutoscaler(cfg)
+    est, reps = _replicas(3)
+    reps[0].role = ReplicaRole.PREFILL
+    reps[1].role = ReplicaRole.DECODE
+    reps[2].role = ReplicaRole.DECODE
+    for _ in range(20):                          # decode pool backlogged
+        reps[1].sched.submit(_req(), now=0.0)
+    assert scaler.decide_role(0.0, reps) == ("up", ReplicaRole.DECODE)
+    assert scaler.decide_role(5.0, reps) is None          # cooldown
+    assert scaler.events[-1].role == "decode"
+    # drain the queues -> the over-target pool gives a replica back
+    for r in reps:
+        r.sched.queues.drain()
+    assert scaler.decide_role(20.0, reps) == ("down", ReplicaRole.DECODE)
+
+
+def test_role_autoscaler_keeps_one_replica_per_role():
+    cfg = RoleAutoscalerConfig(min_replicas=1, max_replicas=8,
+                               up_queue_mass_per_replica=1e9,
+                               down_queue_mass_per_replica=1e9,
+                               down_utilization=1.0, cooldown=0.0)
+    scaler = RoleAutoscaler(cfg)
+    est, reps = _replicas(2)
+    reps[0].role = ReplicaRole.PREFILL
+    reps[1].role = ReplicaRole.DECODE
+    # both pools idle and "calm", but neither can shrink below 1
+    assert scaler.decide_role(0.0, reps) is None
+    assert scaler.pick_drain_target(reps, role=ReplicaRole.PREFILL) is None
+
+
+def test_pd_cluster_autoscales_decode_pool_under_burst():
+    scaler = RoleAutoscaler(RoleAutoscalerConfig(
+        min_replicas=2, max_replicas=8,
+        up_queue_mass_per_replica=10_000.0, cooldown=5.0,
+        startup_delay=2.0))
+    cfg = ClusterConfig(n_replicas=4, seed=1, routing="pd_disaggregated")
+    sim2 = ClusterSimulator(plan=_mkplan(1, 4, 400), config=cfg,
+                            cost_model=L4_MAX_DRIVEN, autoscaler=scaler)
+    m2 = sim2.run()
+    assert m2.run.n_completed == 400
+    ups = [e for e in m2.scale_events if e["action"] == "up"]
+    assert ups and all(e["role"] in ("prefill", "decode") for e in ups)
+    grown = [r for r in sim2.replicas if r.rid >= 4]
+    assert grown and all(r.role in (ReplicaRole.PREFILL, ReplicaRole.DECODE)
+                         for r in grown)
 
 
 def test_drift_aware_beats_round_robin_on_p99():
