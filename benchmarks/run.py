@@ -2,12 +2,16 @@
 plus the beyond-paper fault-tolerance, cluster-routing, and
 P/D-disaggregation suites and the roofline summary.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--json PATH]
+    PYTHONPATH=src python -m benchmarks.run [--list] [--only NAME]
+                                            [--json PATH]
 
-``--json PATH`` additionally writes every executed benchmark's raw
-result dict (plus wall time, failure status, the benchmark's config
-constants, and the repo git SHA) to one machine-readable JSON file, so
-per-PR perf trajectories stay attributable across PRs.
+``--list`` prints the available benchmark keys together with each
+module's config constants and exits. ``--only`` substring-filters the
+keys and errors out (listing them) when nothing matches. ``--json
+PATH`` additionally writes every executed benchmark's raw result dict
+(plus wall time, failure status, the benchmark's config constants, and
+the repo git SHA) to one machine-readable JSON file (``-`` for stdout),
+so per-PR perf trajectories stay attributable across PRs.
 """
 
 from __future__ import annotations
@@ -18,10 +22,10 @@ import subprocess
 import sys
 import time
 
-from . import (bench_bias_convergence, bench_cluster_routing,
-               bench_drift_error, bench_fault_tolerance,
-               bench_gpu_exec_latency, bench_pd_disagg,
-               bench_queue_dynamics, bench_roofline,
+from . import (bench_bias_convergence, bench_chunked_prefill,
+               bench_cluster_routing, bench_drift_error,
+               bench_fault_tolerance, bench_gpu_exec_latency,
+               bench_pd_disagg, bench_queue_dynamics, bench_roofline,
                bench_semantic_runtime, bench_tail_latency,
                bench_tenant_qos, bench_wait_by_class)
 
@@ -37,6 +41,7 @@ BENCHES = [
     ("fault_tolerance (beyond-paper)", bench_fault_tolerance),
     ("cluster_routing (beyond-paper)", bench_cluster_routing),
     ("pd_disagg (beyond-paper)", bench_pd_disagg),
+    ("chunked_prefill (beyond-paper)", bench_chunked_prefill),
     ("roofline (deliverable g)", bench_roofline),
 ]
 
@@ -72,36 +77,65 @@ def bench_config(mod) -> dict:
     return out
 
 
+def list_benches() -> str:
+    """Human-readable inventory: every benchmark key plus the config
+    constants that parameterise it (what ``--only`` matches against)."""
+    lines = ["available benchmarks (--only matches substrings):"]
+    for name, mod in BENCHES:
+        lines.append(f"  {name}")
+        cfg = bench_config(mod)
+        for k in sorted(cfg):
+            lines.append(f"      {k} = {cfg[k]!r}")
+    return "\n".join(lines)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--list", action="store_true",
+                    help="print available benchmark keys and their "
+                         "config constants, then exit")
     ap.add_argument("--only", default=None,
-                    help="substring filter on benchmark name")
+                    help="substring filter on benchmark name "
+                         "(see --list); unknown filters are an error")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write all executed benchmark results to PATH "
-                         "as machine-readable JSON")
+                         "as machine-readable JSON ('-' for stdout)")
     args = ap.parse_args(argv)
 
+    if args.list:
+        print(list_benches())
+        return 0
+    selected = [(name, mod) for name, mod in BENCHES
+                if not args.only or args.only in name]
+    if not selected:
+        print(f"error: --only {args.only!r} matches no benchmark\n",
+              file=sys.stderr)
+        print(list_benches(), file=sys.stderr)
+        return 2
+
+    # with --json - the JSON document owns stdout (machine-readable
+    # contract); the human-readable progress/report stream moves to
+    # stderr so `... --json - | jq .` just works
+    log = sys.stderr if args.json == "-" else sys.stdout
     failures = 0
     results = {"_meta": {"git_sha": git_sha(),
                          "argv": list(argv) if argv is not None
                          else sys.argv[1:]}}
-    for name, mod in BENCHES:
-        if args.only and args.only not in name:
-            continue
+    for name, mod in selected:
         t0 = time.time()
-        print(f"\n=== {name} ===", flush=True)
+        print(f"\n=== {name} ===", flush=True, file=log)
         try:
             out = mod.run()
-            print(mod.report(out))
+            print(mod.report(out), file=log)
             dt = time.time() - t0
-            print(f"[done in {dt:.1f}s]")
+            print(f"[done in {dt:.1f}s]", file=log)
             results[name] = {"ok": True, "wall_s": dt,
                              "git_sha": results["_meta"]["git_sha"],
                              "config": bench_config(mod), "result": out}
         except Exception as e:  # keep the harness going
             failures += 1
             import traceback
-            print(f"[FAILED] {type(e).__name__}: {e}")
+            print(f"[FAILED] {type(e).__name__}: {e}", file=log)
             traceback.print_exc()
             results[name] = {"ok": False, "wall_s": time.time() - t0,
                              "git_sha": results["_meta"]["git_sha"],
@@ -109,9 +143,14 @@ def main(argv=None) -> int:
                              "error": f"{type(e).__name__}: {e}"}
     if args.json:
         from .common import sanitize_json
-        with open(args.json, "w") as f:
-            json.dump(sanitize_json(results), f, indent=1, default=str)
-        print(f"\n[json results -> {args.json}]")
+        if args.json == "-":
+            json.dump(sanitize_json(results), sys.stdout, indent=1,
+                      default=str)
+            print()
+        else:
+            with open(args.json, "w") as f:
+                json.dump(sanitize_json(results), f, indent=1, default=str)
+            print(f"\n[json results -> {args.json}]", file=log)
     return 1 if failures else 0
 
 

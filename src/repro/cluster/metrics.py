@@ -54,10 +54,14 @@ class ClusterMetrics:
     The per-phase breakdown (all in seconds since arrival):
 
     * ``ttft`` — time to first token. Real (end of the prefill phase)
-      on the P/D path; on the unified path the batch-atomic cost model
-      only observes the first token at batch end, so TTFT degrades to
-      e2e there — that asymmetry *is* the head-of-line effect
-      disaggregation removes.
+      on the P/D path, and real on unified replicas running the
+      iteration-level step engine (``ClusterConfig.step_engine``: the
+      iteration that emitted the request's first token). Only on the
+      legacy atomic path does the cost model observe the first token at
+      batch end, degrading unified TTFT to e2e — that asymmetry *is*
+      the head-of-line effect both disaggregation and chunked-prefill
+      continuous batching remove (compare them head-to-head with
+      ``benchmarks.bench_chunked_prefill``).
     * ``decode`` — KV arrival on the decode replica → completion
       (decode queueing + execution); only P/D requests have it.
     * ``kv_transfer`` — modeled prefill→decode transfer time.

@@ -7,7 +7,11 @@ or a real :class:`~repro.serving.engine.ServingEngine` via the driver).
 The router and autoscaler only see the :class:`Replica` introspection
 surface — queued/in-flight estimated-token mass, depth, lifecycle state
 — so routing policies are execution-agnostic, exactly like the
-scheduler itself.
+scheduler itself. Under the iteration-level step engine
+(``ClusterConfig.step_engine``) that surface is iteration-fresh:
+in-flight mass drops the moment a slot retires mid-batch, rather than
+only at batch drain, so load signals (and the work stealing / autoscale
+decisions built on them) track continuous batching honestly.
 
 Token mass is measured in *estimated budget tokens* (Eq. 1): the
 cluster layer deliberately reasons in the same calibrated unit the

@@ -18,9 +18,16 @@ there (drift feedback fires once, attributed to the decode phase).
 Optional work stealing lets idle replicas take queued work from
 overloaded role-compatible peers at every control tick.
 
-Replica events (batch_start/batch_done/fail/repair) emitted by a
-replica's simulator are routed back through the shared heap via the
-sink mechanism, so cross-replica ordering is exact and deterministic.
+Replica events (batch_start/batch_done/step_done/fail/repair) emitted
+by a replica's simulator are routed back through the shared heap via
+the sink mechanism, so cross-replica ordering is exact and
+deterministic. With ``ClusterConfig.step_engine=True`` every replica
+runs the iteration-level continuous-batching engine
+(``serving.simulator`` module docstring): unified replicas report
+honest per-request TTFT (first decoded token, not batch end), P/D
+prefill handoffs fire the moment a prompt's last chunk lands rather
+than at batch drain, and preemption/work-stealing observe replica state
+at iteration boundaries.
 
 Fault injection composes with the per-worker story: a replica failure
 aborts its in-flight batches (re-queued with estimates preserved, no
@@ -69,6 +76,19 @@ class ClusterConfig:
     scheduler_policy: str = "fifo"
     batch_capacity: int = 32          # per replica (paper Sec. III-B)
     batch_wait: float = 0.01
+    # --- iteration-level execution core (serving.simulator docstring):
+    # step_engine=False keeps the calibrated atomic-batch pricing; True
+    # runs every replica on the continuous-batching step engine —
+    # unified replicas then report honest per-request TTFT, and P/D
+    # handoffs / preemption / work stealing land at iteration
+    # boundaries. chunk_prefill_tokens budgets prefill tokens per
+    # iteration (None = unbounded); continuous_joins=False degenerates
+    # to the atomic/parity contract; max_new_per_step caps slot
+    # admissions per iteration (DriftScheduler.dispatch_step).
+    step_engine: bool = False
+    chunk_prefill_tokens: Optional[int] = None
+    continuous_joins: bool = True
+    max_new_per_step: Optional[int] = None
     control_interval: float = 1.0     # autoscaler / telemetry cadence
     max_time: float = 1e6             # hard stop against pathological stalls
     # replica-level fault injection: (absolute time, replica id)
@@ -266,15 +286,19 @@ class ClusterSimulator:
         feedback to the "decode" phase."""
         rid = next(self._rid_seq)
         sched = DriftScheduler(policy=self.cfg.scheduler_policy,
-                               estimator=self.estimator)
+                               estimator=self.estimator,
+                               max_new_per_step=self.cfg.max_new_per_step)
         cost = self.cost
         hook = None
+        phase = "unified"
         if role is ReplicaRole.PREFILL:
             cost = prefill_view(self.cost)
+            phase = "prefill"
             hook = (lambda req, now, rid=rid:
                     self._on_prefill_done(rid, req, now))
         elif role is ReplicaRole.DECODE:
             cost = decode_view(self.cost)
+            phase = "decode"
             sched.feedback_phase = "decode"
         sim = WorkerSimulator(
             sched,
@@ -282,6 +306,10 @@ class ClusterSimulator:
                 batch_capacity=self.cfg.batch_capacity,
                 batch_wait=self.cfg.batch_wait,
                 n_workers=self.cfg.workers_per_replica,
+                step_engine=self.cfg.step_engine,
+                chunk_prefill_tokens=self.cfg.chunk_prefill_tokens,
+                continuous_joins=self.cfg.continuous_joins,
+                phase=phase,
                 repair_time=self.cfg.repair_time,
                 seed=self.cfg.seed),
             cost_model=cost,
@@ -380,9 +408,9 @@ class ClusterSimulator:
     def _on_replica_event(self, rid: int, rkind: str, rpayload,
                           now: float) -> None:
         """Forward one replica-emitted event (batch_start / batch_done /
-        fail / repair / kick) back into its WorkerSimulator and count
-        any completions it produced. Prefill-phase finishes are
-        intercepted by the completion hook and never count here."""
+        step_done / fail / repair / kick) back into its WorkerSimulator
+        and count any completions it produced. Prefill-phase finishes
+        are intercepted by the completion hook and never count here."""
         rep = self.replicas[rid]
         if rkind == "repair" and rep.state is ReplicaState.FAILED:
             rep.state = ReplicaState.ACTIVE
@@ -390,11 +418,12 @@ class ClusterSimulator:
 
     # --- P/D two-stage lifecycle ---------------------------------------
     def _on_prefill_done(self, rid: int, req: Request, now: float) -> bool:
-        """Completion hook on prefill replicas: the batch finished means
-        the *prefill phase* finished — stamp TTFT, start the modeled KV
-        transfer, and tell the WorkerSimulator the request was taken
-        over (no ``sched.complete``, so no drift feedback: the prefill
-        phase observes no output length)."""
+        """Completion hook on prefill replicas: the request's *prefill
+        phase* finished (batch end on the atomic path; the iteration its
+        last prompt chunk landed on the step engine) — stamp TTFT, start
+        the modeled KV transfer, and tell the WorkerSimulator the
+        request was taken over (no ``sched.complete``, so no drift
+        feedback: the prefill phase observes no output length)."""
         req.prefill_end = now
         req.prefill_rid = rid
         rep = self.replicas[rid]

@@ -35,10 +35,19 @@ class DriftScheduler:
     def __init__(self, policy: str | SchedulingPolicy = "fifo",
                  config: Optional[DriftConfig] = None,
                  estimator: Optional[AdaptiveTokenEstimator] = None,
+                 max_new_per_step: Optional[int] = None,
                  **policy_kwargs) -> None:
         """``estimator`` may be shared across schedulers: the cluster
         layer hands every replica the same AdaptiveTokenEstimator so
-        drift feedback from any replica calibrates them all."""
+        drift feedback from any replica calibrates them all.
+
+        ``max_new_per_step`` caps how many queued requests
+        :meth:`dispatch_step` admits at one iteration boundary of a
+        continuous-batching executor (None = fill every free slot).
+        Sarathi-style chunked prefill bounds the per-iteration prefill
+        *token* budget in the executor; this knob bounds per-iteration
+        *admissions*, limiting how much prefill work can pile into one
+        iteration in the first place."""
         if estimator is not None and config is not None \
                 and estimator.config is not config:
             raise ValueError("pass either a shared estimator or a config, "
@@ -52,6 +61,10 @@ class DriftScheduler:
             policy if isinstance(policy, SchedulingPolicy)
             else make_policy(policy, **policy_kwargs)
         )
+        if max_new_per_step is not None and max_new_per_step < 1:
+            raise ValueError(
+                f"max_new_per_step must be >= 1 or None, got {max_new_per_step}")
+        self.max_new_per_step = max_new_per_step
         self.drift = DriftTracker()
         self.completed: List[Request] = []
         self.dispatched = 0
@@ -85,6 +98,18 @@ class DriftScheduler:
                 break
             out.append(req)
         return out
+
+    def dispatch_step(self, now: float, free_slots: int) -> List[Request]:
+        """Slot-granular admission for iteration-level executors: fill
+        at most ``free_slots`` freed decode slots, further capped by the
+        ``max_new_per_step`` admission knob. Delegates to
+        :meth:`dispatch_batch` so the per-request dispatch contract
+        (policy selection, state transition, dispatch count) is
+        identical on both execution paths."""
+        cap = free_slots
+        if self.max_new_per_step is not None:
+            cap = min(cap, self.max_new_per_step)
+        return self.dispatch_batch(now, max(cap, 0))
 
     def complete(self, req: Request, observed_tokens: int, now: float,
                  phase: Optional[str] = None) -> DriftSample:

@@ -16,10 +16,10 @@ from .cost_model import CostModel, L4_QWEN_1_8B
 from .engine import EngineConfig, ServingEngine
 from .kv_cache import PagedAllocator, PagedPool
 from .metrics import RunMetrics, percentile, summarize_run
-from .simulator import ClusterSimulator, SimConfig, WorkerSimulator
+from .simulator import SimConfig, WorkerSimulator
 
 __all__ = [
-    "ClusterSimulator", "CostModel", "EngineConfig", "L4_QWEN_1_8B",
+    "CostModel", "EngineConfig", "L4_QWEN_1_8B",
     "PagedAllocator", "PagedPool", "RunMetrics", "ServingEngine",
     "SimConfig", "WorkerSimulator", "percentile", "summarize_run",
 ]

@@ -12,12 +12,27 @@ Two calibrations:
   per-token service rates, so the same simulator projects DriftSched
   behaviour onto the v5e serving deployment.
 
-Batch execution is atomic at the scheduler's granularity (the paper
-records worker timestamps around each GPU batch, Sec. II-I):
+The primitive is one continuous-batching *iteration* (Orca/vLLM /
+Sarathi chunked prefill):
+
+    T(step) = c_decode_max                      # per-iteration walk/launch
+            + c_decode_sum * n_decoding         # one token per active slot
+            + c_prefill * prefill_tokens        # chunked-prefill share
+
+:meth:`CostModel.batch_time` — the paper's atomic-batch price (worker
+timestamps recorded around each GPU batch, Sec. II-I) — is the *derived
+legacy view*: the closed form of ``t_base`` plus the sum of step times
+over a batch run to completion with unbounded chunk budget and no
+mid-flight joins,
 
     T(batch) = t_base + c_prefill * sum(prompt_tokens)
              + c_decode_max * max(output_tokens)       # batch walks to
              + c_decode_sum * sum(output_tokens)       # its longest member
+
+(slot i emits in iterations 1..out_i, so the sum telescopes). The
+identity is locked by ``tests/test_step_engine.py``; the L4
+calibrations below were fitted against the atomic view and stay
+meaningful for the step engine because of it.
 """
 
 from __future__ import annotations
@@ -39,8 +54,30 @@ class CostModel:
     c_decode_sum: float      # s per output token summed over batch
     jitter_sigma: float = 0.02   # lognormal execution noise
 
+    def step_time(self, n_decoding: int, prefill_tokens: int = 0, *,
+                  include_base: bool = False, jitter: float = 1.0) -> float:
+        """Price ONE continuous-batching iteration: ``n_decoding`` slots
+        each emit one token, plus a chunked-prefill share of
+        ``prefill_tokens`` prompt tokens processed alongside them
+        (Sarathi-style piggybacking). ``include_base`` adds the
+        per-dispatch launch overhead ``t_base`` — charged once per batch
+        formation, not per iteration (continuous batching amortises the
+        launch across the busy period). Returns 0 for an empty step."""
+        if n_decoding <= 0 and prefill_tokens <= 0:
+            return 0.0
+        t = (self.c_decode_max
+             + self.c_decode_sum * n_decoding
+             + self.c_prefill * prefill_tokens)
+        if include_base:
+            t += self.t_base
+        return t * jitter
+
     def batch_time(self, requests: Iterable[Request], *,
                    jitter: float = 1.0) -> float:
+        """Atomic-batch price — the derived/legacy view of
+        :meth:`step_time` (see module docstring for the telescoped
+        identity): the batch prefills every prompt up front and decodes
+        until its longest member finishes."""
         reqs = list(requests)
         if not reqs:
             return 0.0

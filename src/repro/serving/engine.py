@@ -204,15 +204,23 @@ class ServingEngine:
     def step(self, now: float) -> int:
         """One engine iteration: admit into free slots, advance every
         active slot one token, retire finished ones. Returns number of
-        completions this step."""
+        completions this step. Per-iteration admission honours the
+        scheduler's ``max_new_per_step`` knob — the same slot-granular
+        contract the discrete-event step engine uses
+        (``DriftScheduler.dispatch_step``)."""
         # admission
+        joined = 0
+        cap = self.sched.max_new_per_step
         for slot in self.free_slots():
             if self.sched.queue_depth() == 0:
+                break
+            if cap is not None and joined >= cap:
                 break
             req = self.sched.dispatch(now)
             if req is None:
                 break
             self._admit(req, slot, now)
+            joined += 1
 
         active = self.active_slots()
         if not active:

@@ -5,6 +5,37 @@ engine uses) against a calibrated service-time model, reproducing the
 paper's protocol: two-phase arrivals (calibration + stress), batch
 capacity 32, batch wait 0.01 s, GPU saturation, telemetry sampling.
 
+Two execution modes, selected by :attr:`SimConfig.step_engine`:
+
+* **atomic** (default, the paper's protocol): a dispatched batch is
+  priced as one unit by :meth:`CostModel.batch_time` and runs to
+  completion; every member completes at batch end. This is the
+  calibration target of the L4 cost models.
+* **step engine** (``step_engine=True``): iteration-level continuous
+  batching. The worker holds a :class:`RunningBatch` of per-slot
+  progress (prefill tokens remaining, tokens decoded); every event is
+  ONE iteration priced by :meth:`CostModel.step_time`. Prefill is
+  chunked against a per-step token budget
+  (``chunk_prefill_tokens``, Sarathi-style), free slots admit queued
+  requests at every iteration boundary (``continuous_joins``, capped by
+  the scheduler's ``max_new_per_step``), requests retire — and stamp
+  real per-request TTFT (``Request.prefill_end``, the iteration that
+  emitted their first token) and completion times — at their own
+  iteration, and worker failure preempts at the iteration boundary:
+  already-completed members stay completed, unfinished slots re-queue
+  with estimates preserved (at-most-once feedback).
+
+  **Parity mode** — ``chunk_prefill_tokens=None`` (unbounded) and
+  ``continuous_joins=False`` — degenerates the step engine to the
+  atomic contract: the whole batch prefills in its first iteration, no
+  one joins mid-flight, and retirements are held until the batch
+  drains, so every member completes at batch end. Because
+  ``batch_time`` is exactly ``t_base`` plus the telescoped sum of
+  ``step_time`` (cost_model.py), parity-mode results reproduce the
+  atomic path bit-for-bit modulo float summation order (locked by
+  tests/test_step_engine.py) and the existing paper-validation
+  calibrations stay meaningful.
+
 :class:`WorkerSimulator` can run standalone (its own event loop, the
 paper's single-replica protocol) or be composed: when constructed with
 an external event ``sink`` it emits its events there instead of its own
@@ -30,6 +61,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import math
 import random
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
@@ -48,6 +80,23 @@ class SimConfig:
     batch_wait: float = 0.01          # paper Sec. III-B
     n_workers: int = 1
     telemetry_interval: float = 0.2   # paper: 200 ms nvidia-smi sampling
+    # --- iteration-level execution core (continuous batching) ---
+    # step_engine=False keeps the paper's atomic-batch pricing; True
+    # switches to per-iteration events (see module docstring).
+    step_engine: bool = False
+    # per-STEP prefill token budget shared by joining slots in join
+    # order (None = unbounded: a joining prompt prefills fully in its
+    # first iteration). Only meaningful with step_engine=True.
+    chunk_prefill_tokens: Optional[int] = None
+    # admit queued requests into freed slots at iteration boundaries;
+    # False = atomic batches (the legacy/parity contract: retirements
+    # held to batch drain). Only meaningful with step_engine=True.
+    continuous_joins: bool = True
+    # which serving phase this worker group executes ("unified",
+    # "prefill", "decode") — set by the cluster layer under P/D
+    # disaggregation. Prefill-phase slots retire at prefill completion
+    # (no decode); decode-phase work arrives with its KV handed off.
+    phase: str = "unified"
     # fault injection
     fail_times: Tuple[float, ...] = ()    # absolute failure times
     fail_worker: int = 0                  # which worker fails
@@ -62,6 +111,7 @@ class SimConfig:
     # worker is idle, speculatively re-execute it there; first completion
     # wins, the loser's results are discarded (GPU batches are not
     # cancellable mid-flight, so the loser runs to completion).
+    # Batch-granular by nature — mutually exclusive with step_engine.
     hedge: bool = False
     hedge_factor: float = 2.5
     seed: int = 0
@@ -78,6 +128,54 @@ class WorkerState:
     exec_started: float = 0.0
     expected_exec: float = 0.0
     hedged: bool = False           # this batch already has a hedge copy
+
+
+@dataclass
+class SlotProgress:
+    """Per-request execution state inside a :class:`RunningBatch`."""
+
+    req: Request
+    prefill_remaining: int      # prompt tokens not yet prefilled here
+    target: int                 # decode tokens to emit (0 on prefill phase)
+    decode_done: int = 0        # tokens emitted so far
+
+
+@dataclass
+class RunningBatch:
+    """One worker's live continuous batch (step engine only).
+
+    ``pending`` is the iteration currently executing, precomputed when
+    it was scheduled: (slot, prefill_tokens_this_step, emits_token).
+    ``finished`` holds retired members awaiting batch drain when
+    mid-flight joins are disabled (the atomic/parity contract).
+    ``gen`` invalidates in-flight step events after an abort."""
+
+    slots: List[SlotProgress]
+    gen: int
+    pending: List[Tuple[SlotProgress, int, bool]] = field(
+        default_factory=list)
+    finished: List[SlotProgress] = field(default_factory=list)
+
+
+# --- telemetry memory model (satellite of the step-engine rework) ------
+# The paper platform preallocates its paged KV pool vLLM-style, so
+# nvidia-smi shows a ~14 GB plateau (weights ~3.7 GB FP16 1.8B + the
+# reserved pool + CUDA context). What *moves* with load is the working
+# set: pages actually holding KV (prompt + decoded tokens, page-granular
+# like kv_cache.PagedAllocator.pages_needed) drive allocator state and
+# activation workspace. We model mem as plateau + workspace scaled by
+# pool occupancy, so telemetry responds to chunked prefill (pages
+# materialise as tokens do) while reproducing the paper's Fig 9 plateau.
+KV_PAGE_TOKENS = 128                  # kv_cache.PagedPool default page
+KV_MAX_CONTEXT_TOKENS = 2048          # per-slot pool sizing: prompt+output
+GPU_MEM_PLATEAU_GB = 14.0             # weights + reserved pool + context
+GPU_MEM_DYNAMIC_GB = 1.2              # workspace swing at full occupancy
+
+
+def _pages_needed(n_tokens: int) -> int:
+    """Mirror of ``kv_cache.PagedAllocator.pages_needed`` (kept inline so
+    the simulator stays importable without JAX)."""
+    return max(1, math.ceil(n_tokens / KV_PAGE_TOKENS))
 
 
 @dataclass
@@ -101,8 +199,8 @@ class WorkerSimulator:
                  complete_hook: Optional[
                      Callable[[Request, float], bool]] = None) -> None:
         """``complete_hook(req, now) -> bool``, when given, is consulted
-        as each request's batch finishes: returning True means the owner
-        took the request over (e.g. a P/D prefill replica handing the
+        as each request finishes: returning True means the owner took
+        the request over (e.g. a P/D prefill replica handing the
         prefilled request off for decode elsewhere) and the normal
         completion path — ``sched.complete`` and its drift feedback —
         must not run for it. Disables hedged dispatch: intercepted
@@ -112,6 +210,21 @@ class WorkerSimulator:
         self._complete_hook = complete_hook
         self.plan = plan
         self.cfg = config or SimConfig()
+        c = self.cfg.chunk_prefill_tokens
+        if c is not None and c < 1:
+            raise ValueError(
+                f"chunk_prefill_tokens must be >= 1 or None, got {c}")
+        if self.cfg.step_engine:
+            if self.cfg.hedge:
+                raise ValueError(
+                    "hedged dispatch is batch-granular and incompatible "
+                    "with the iteration-level step engine")
+        elif c is not None:
+            # a budget on the atomic path would be silently ignored and
+            # misread as "chunking has no effect" — refuse instead
+            raise ValueError(
+                "chunk_prefill_tokens requires step_engine=True: the "
+                "atomic-batch path prefills whole prompts by definition")
         self.cost = cost_model or L4_QWEN_1_8B
         self.rng = rng or random.Random(self.cfg.seed)
         self._sink = sink
@@ -122,11 +235,21 @@ class WorkerSimulator:
         self.n_failed_dispatches = 0
         self.n_hedges = 0
         self.n_hedge_wins = 0
+        self.n_steps = 0                   # step-engine iterations run
+        self.n_joins = 0                   # mid-flight slot joins
         self.phase_boundary: float = 0.0   # set when the stress burst fires
+        # per-request token accounting (step engine): req_id ->
+        # [prefill tokens processed, decode tokens emitted]. Reset on
+        # abort (preempted iterations were never observed), so for every
+        # completed request it must equal [prompt_tokens, observed]
+        # (conservation, locked by tests/test_step_engine.py).
+        self.token_ledger: Dict[int, List[int]] = {}
         self._events: List[tuple] = []
         self._eseq = itertools.count()
+        self._gen = itertools.count(1)
         self._pending_batch_start: Dict[int, bool] = {}
-        self._inflight: Dict[int, List[Request]] = {}
+        self._inflight: Dict[int, List[Request]] = {}      # atomic mode
+        self._batches: Dict[int, RunningBatch] = {}        # step mode
 
     # ------------------------------------------------------------------
     def _push(self, t: float, kind: str, payload=None) -> None:
@@ -151,6 +274,11 @@ class WorkerSimulator:
         elif kind == "batch_done":
             wid, reqs, aborted = payload
             done = self._finish_batch(wid, reqs, aborted, now)
+            self._try_dispatch(now)
+            return done
+        elif kind == "step_done":
+            wid, gen = payload
+            done = self._finish_step(wid, gen, now)
             self._try_dispatch(now)
             return done
         elif kind == "fail":
@@ -216,7 +344,11 @@ class WorkerSimulator:
 
     # --- composition introspection (used by repro.cluster) -------------
     def inflight_requests(self) -> List[Request]:
-        return [r for reqs in self._inflight.values() for r in reqs]
+        out = [r for reqs in self._inflight.values() for r in reqs]
+        for batch in self._batches.values():
+            out.extend(s.req for s in batch.slots)
+            out.extend(s.req for s in batch.finished)
+        return out
 
     def n_busy_workers(self) -> int:
         return sum(1 for w in self.workers if w.alive and not w.idle)
@@ -225,7 +357,8 @@ class WorkerSimulator:
         return sum(1 for w in self.workers if w.alive)
 
     def is_idle(self) -> bool:
-        return not self._inflight and self.sched.queue_depth() == 0
+        return (not self._inflight and not self._batches
+                and self.sched.queue_depth() == 0)
 
     # ------------------------------------------------------------------
     def _eligible_workers(self, now: float) -> List[int]:
@@ -253,16 +386,23 @@ class WorkerSimulator:
         w = self.workers[wid]
         if not (w.alive and w.idle):
             return
-        reqs = self.sched.dispatch_batch(now, self.cfg.batch_capacity)
+        if self.cfg.step_engine:
+            reqs = self.sched.dispatch_step(now, self.cfg.batch_capacity)
+        else:
+            reqs = self.sched.dispatch_batch(now, self.cfg.batch_capacity)
         if not reqs:
             return
         for r in reqs:
             r.state = RequestState.EXECUTING
             r.exec_start = now
             r.worker_id = wid
-        self._run_batch(wid, reqs, now)
+        if self.cfg.step_engine:
+            self._start_step_batch(wid, reqs, now)
+        else:
+            self._run_batch(wid, reqs, now)
         self.sched.queues.record_depth(now)
 
+    # --- atomic-batch execution (the paper's calibrated protocol) -------
     def _run_batch(self, wid: int, reqs: List[Request], now: float) -> None:
         w = self.workers[wid]
         w.idle = False
@@ -339,6 +479,143 @@ class WorkerSimulator:
         self.sched.queues.record_depth(now)
         return done
 
+    # --- iteration-level execution (continuous batching) ----------------
+    def _make_slot(self, req: Request) -> SlotProgress:
+        """Slot state for a joining request. Work already prefilled
+        elsewhere (its KV arrived via a P/D handoff) skips prefill;
+        prefill-phase slots decode nothing (target 0) and retire at
+        prefill completion."""
+        prefill = 0 if req.handoff_time is not None else req.prompt_tokens
+        target = (0 if self.cfg.phase == "prefill"
+                  else min(req.true_output_tokens, req.max_tokens))
+        self.token_ledger[req.req_id] = [0, 0]
+        return SlotProgress(req=req, prefill_remaining=prefill,
+                            target=target)
+
+    def _start_step_batch(self, wid: int, reqs: List[Request],
+                          now: float) -> None:
+        w = self.workers[wid]
+        w.idle = False
+        w.exec_started = now
+        w.batches += 1
+        batch = RunningBatch(slots=[self._make_slot(r) for r in reqs],
+                             gen=next(self._gen))
+        self._batches[wid] = batch
+        self._schedule_step(wid, now, include_base=True)
+
+    def _schedule_step(self, wid: int, now: float, *,
+                       include_base: bool = False) -> None:
+        """Precompute and schedule ONE iteration: apportion the per-step
+        prefill chunk budget across prefilling slots in join order, mark
+        which slots emit a decode token (a slot's prefill-completing
+        iteration also emits its first token, like the JAX engine's
+        prefill), and price it via :meth:`CostModel.step_time`."""
+        w = self.workers[wid]
+        batch = self._batches[wid]
+        budget = self.cfg.chunk_prefill_tokens
+        remaining = math.inf if budget is None else budget
+        pending: List[Tuple[SlotProgress, int, bool]] = []
+        n_emit = 0
+        prefill_tokens = 0
+        for slot in batch.slots:
+            take = 0
+            if slot.prefill_remaining > 0:
+                take = int(min(slot.prefill_remaining, remaining))
+                remaining -= take
+                emits = (take == slot.prefill_remaining
+                         and slot.target > 0)
+            else:
+                emits = slot.decode_done < slot.target
+            pending.append((slot, take, emits))
+            prefill_tokens += take
+            n_emit += int(emits)
+        batch.pending = pending
+        dt = self.cost.step_time(
+            n_emit, prefill_tokens, include_base=include_base,
+            jitter=self.cost.jitter(self.rng))
+        if w.slow:
+            dt *= self.cfg.straggler_factor
+        w.busy_until = now + dt
+        w.busy_time += dt
+        self.n_steps += 1
+        self.heartbeats.beat(wid, now)
+        self.stragglers.observe(wid, dt)
+        self._push(now + dt, "step_done", (wid, batch.gen))
+
+    def _complete_step_request(self, slot: SlotProgress, now: float) -> int:
+        """Retire one finished slot: stamp timestamps and run the normal
+        completion path unless the owner's hook intercepts (P/D prefill
+        handoff). Returns 1 when a completion was produced."""
+        req = slot.req
+        if self._complete_hook is not None and self._complete_hook(req, now):
+            return 0
+        req.exec_end = now
+        self.sched.complete(req, slot.decode_done, now)
+        return 1
+
+    def _finish_step(self, wid: int, gen: int, now: float) -> int:
+        """One iteration boundary: apply the precomputed progress, stamp
+        TTFT on slots whose first token just landed, retire finished
+        slots (immediately with mid-flight joins; held to batch drain in
+        the atomic/parity contract), then refill free slots and schedule
+        the next iteration."""
+        w = self.workers[wid]
+        batch = self._batches.get(wid)
+        if batch is None or batch.gen != gen or not w.alive:
+            return 0                       # stale event (aborted batch)
+        done = 0
+        still: List[SlotProgress] = []
+        for slot, take, emits in batch.pending:
+            ledger = self.token_ledger[slot.req.req_id]
+            if take:
+                slot.prefill_remaining -= take
+                ledger[0] += take
+            if emits:
+                slot.decode_done += 1
+                ledger[1] += 1
+                if slot.decode_done == 1 and slot.req.prefill_end is None:
+                    # first token observed at this iteration's end: the
+                    # honest unified-replica TTFT anchor
+                    slot.req.prefill_end = now
+            finished = (slot.prefill_remaining <= 0
+                        and slot.decode_done >= slot.target)
+            if not finished:
+                still.append(slot)
+            elif self.cfg.continuous_joins:
+                done += self._complete_step_request(slot, now)
+            else:
+                batch.finished.append(slot)
+        batch.slots = still
+        batch.pending = []
+
+        if self.cfg.continuous_joins and batch.slots:
+            free = self.cfg.batch_capacity - len(batch.slots)
+            if free > 0 and self.sched.queue_depth() > 0:
+                joined = self.sched.dispatch_step(now, free)
+                for r in joined:
+                    r.state = RequestState.EXECUTING
+                    r.exec_start = now
+                    r.worker_id = wid
+                    batch.slots.append(self._make_slot(r))
+                if joined:
+                    self.n_joins += len(joined)
+                    self.sched.queues.record_depth(now)
+
+        if batch.slots:
+            self._schedule_step(wid, now)
+        else:
+            # batch drained: flush held retirements (atomic contract —
+            # everyone completes at batch end, matching batch_time)
+            for slot in batch.finished:
+                done += self._complete_step_request(slot, now)
+            del self._batches[wid]
+            w.idle = True
+            w.busy_until = now
+        if done:
+            self.sched.queues.record_depth(now)
+        return done
+
+    # ------------------------------------------------------------------
     def _fail_worker(self, wid: int, now: float) -> None:
         w = self.workers[wid]
         if not w.alive:
@@ -346,34 +623,93 @@ class WorkerSimulator:
         w.alive = False
         w.idle = False
         reqs = self._inflight.pop(wid, [])
+        batch = self._batches.pop(wid, None)
+        if batch is not None:
+            # iteration-boundary preemption: members that already
+            # retired stay completed; unfinished slots (and retirements
+            # held for the atomic drain) re-queue from scratch
+            reqs = [s.req for s in batch.slots] \
+                + [s.req for s in batch.finished]
         # abort: un-spend the remaining busy time, re-queue the requests
         if reqs:
             w.busy_time -= max(w.busy_until - now, 0.0)
             for r in reqs:
+                if r.handoff_time is None:
+                    # partial unified/prefill progress dies with the
+                    # worker; clear the TTFT stamp so a retry re-anchors
+                    # it (handed-off decode work keeps its prefill_end:
+                    # that phase really did finish elsewhere)
+                    r.prefill_end = None
+                self.token_ledger.pop(r.req_id, None)
                 self.sched.fail(r, now)
                 self.n_failed_dispatches += 1
         self._push(now + self.cfg.repair_time, "repair", wid)
         self.sched.queues.record_depth(now)
 
     # ------------------------------------------------------------------
+    def _slot_kv_pages(self) -> int:
+        """Pages materialised in the KV pool right now, rounded PER
+        SLOT exactly as ``kv_cache.PagedAllocator`` allocates (page
+        granularity is per sequence, not over the aggregate token sum).
+        Step engine: exact per-slot progress (prefilled + decoded —
+        this is what makes memory telemetry respond to chunked
+        prefill). Atomic mode: the batch's full reservation (prompt +
+        planned output), the vLLM-style upper bound an atomic batch
+        allocates up front."""
+        pages = 0
+        for batch in self._batches.values():
+            for slot in itertools.chain(batch.slots, batch.finished):
+                tokens = (slot.req.prompt_tokens - slot.prefill_remaining
+                          + slot.decode_done)
+                if tokens > 0:
+                    pages += _pages_needed(tokens)
+        for reqs in self._inflight.values():
+            for r in reqs:
+                pages += _pages_needed(
+                    r.prompt_tokens + min(r.true_output_tokens,
+                                          r.max_tokens))
+        return pages
+
     def _sample_telemetry(self, now: float) -> None:
-        active = sum(len(v) for v in self._inflight.values())
+        active = sum(len(v) for v in self._inflight.values()) \
+            + sum(len(b.slots) + len(b.finished)
+                  for b in self._batches.values())
         busy_now = sum(1 for w in self.workers if not w.idle and w.alive)
         alive = max(sum(1 for w in self.workers if w.alive), 1)
-        # memory model: weights (~3.7 GB FP16 1.8B) + activations + the
-        # vLLM preallocated KV pool -> observed ~14.5 GB plateau
-        mem = 14.0 + 0.5 * (active / max(self.cfg.batch_capacity, 1))
+        # memory: preallocated plateau + workspace scaled by paged-KV
+        # pool occupancy (see the telemetry memory model notes above)
+        # each worker models one GPU with its own reserved pool of
+        # batch_capacity x max-context pages; occupancy is fleet-wide
+        # used pages over the fleet-wide pool
+        pool_pages = (len(self.workers) * self.cfg.batch_capacity
+                      * _pages_needed(KV_MAX_CONTEXT_TOKENS))
+        used_pages = self._slot_kv_pages() if busy_now else 0
+        occupancy = min(used_pages / max(pool_pages, 1), 1.0)
+        mem = GPU_MEM_PLATEAU_GB + GPU_MEM_DYNAMIC_GB * occupancy
         self.telemetry.append(TelemetrySample(
             time=now,
             gpu_util=0.85 + 0.07 * (busy_now / alive)
             if busy_now else 0.05,
-            gpu_mem_gb=mem if busy_now else 14.0,
+            gpu_mem_gb=mem,
             active_requests=active,
             queue_depth=self.sched.queue_depth(),
         ))
 
 
-# Backwards-compatible alias: before the cluster layer existed this class
-# was the only "cluster" in the codebase. The cluster-level simulator now
-# lives in repro.cluster.simulator.ClusterSimulator.
-ClusterSimulator = WorkerSimulator
+def __getattr__(name: str):
+    # Deliberately ImportError, not AttributeError: the tombstone must
+    # surface its migration pointer on the common breakage path
+    # (`from repro.serving.simulator import ClusterSimulator`), where an
+    # AttributeError would be swallowed and replaced by the generic
+    # "cannot import name" message. The cost — hasattr/getattr probes
+    # for the removed alias fail loudly instead of returning False — is
+    # intended: nothing should feature-detect a pre-cluster-layer alias.
+    if name == "ClusterSimulator":
+        raise ImportError(
+            "repro.serving.simulator.ClusterSimulator was a pre-cluster-"
+            "layer alias of WorkerSimulator and has been removed. Use "
+            "repro.cluster.ClusterSimulator for the N-replica cluster "
+            "simulator, or repro.serving.WorkerSimulator for a single "
+            "replica.")
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")

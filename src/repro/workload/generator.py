@@ -54,6 +54,11 @@ class GeneratorConfig:
     stress_rate: float = 18.0
     max_tokens: int = 1024                     # user-configured cap
     output_noise_sigma: float = 0.10          # per-request sampling noise
+    # scale factor on prompt token counts (the corpus prompts are terse,
+    # 3-32 tokens; chunked-prefill experiments need RAG/agent-scale
+    # prompts of hundreds of tokens, modeled by scaling the counts while
+    # keeping the corpus text/verbosity structure)
+    prompt_tokens_scale: float = 1.0
     seed: int = 0
 
 
@@ -87,7 +92,9 @@ def cluster_stress_config(n_replicas: int, *,
                           total_requests: int = 1200,
                           per_replica_rate: float = 8.0,
                           seed: int = 0,
-                          max_tokens: int = 1024) -> GeneratorConfig:
+                          max_tokens: int = 1024,
+                          prompt_tokens_scale: float = 1.0
+                          ) -> GeneratorConfig:
     """Heterogeneous cluster stress traffic (multi-replica arrival plan).
 
     Same two-burst protocol as the paper, with (a) arrival rates scaled
@@ -108,6 +115,7 @@ def cluster_stress_config(n_replicas: int, *,
         calibration_rate=0.75 * per_replica_rate * n_replicas,
         stress_rate=per_replica_rate * n_replicas,
         max_tokens=max_tokens,
+        prompt_tokens_scale=prompt_tokens_scale,
         seed=seed,
     )
 
@@ -137,7 +145,8 @@ class WorkloadGenerator:
             tenant=tenant,
             category=category,
             prompt=spec.text,
-            prompt_tokens=spec.prompt_tokens,
+            prompt_tokens=max(1, round(spec.prompt_tokens
+                                       * cfg.prompt_tokens_scale)),
             max_tokens=cfg.max_tokens,
             true_output_tokens=true_out,
         )

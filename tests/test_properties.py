@@ -115,6 +115,48 @@ def test_percentile_matches_numpy(values, p):
     assert math.isclose(ours, theirs, rel_tol=1e-9, abs_tol=1e-6)
 
 
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(min_value=1, max_value=900),
+                          st.integers(min_value=1, max_value=200)),
+                min_size=1, max_size=40),
+       st.one_of(st.none(), st.integers(min_value=1, max_value=512)),
+       st.booleans())
+def test_step_engine_token_accounting_conserves(shapes, chunk, joins):
+    """Iteration-level execution conserves tokens: per-step prefill plus
+    decode emissions sum to exactly prompt + observed output for every
+    request, for any chunk budget, with joins on or off."""
+    from dataclasses import replace as _replace
+
+    from repro.core.scheduler import DriftScheduler
+    from repro.serving.cost_model import L4_QWEN_1_8B
+    from repro.serving.simulator import SimConfig, WorkerSimulator
+    from repro.workload.generator import ArrivalPlan, GeneratorConfig
+
+    reqs = [Request(tenant=TIERS[i % len(TIERS)],
+                    category=CATS[i % len(CATS)],
+                    prompt="p", prompt_tokens=prompt,
+                    true_output_tokens=out)
+            for i, (prompt, out) in enumerate(shapes)]
+    plan = ArrivalPlan(
+        calibration=[(0.01 * i, r) for i, r in enumerate(reqs)],
+        stress=[],
+        config=GeneratorConfig(total_requests=len(reqs),
+                               calibration_requests=len(reqs)))
+    sched = DriftScheduler(policy="fifo", config=DriftConfig())
+    sim = WorkerSimulator(
+        sched, plan,
+        SimConfig(seed=0, step_engine=True, continuous_joins=joins,
+                  chunk_prefill_tokens=chunk, batch_capacity=8),
+        cost_model=_replace(L4_QWEN_1_8B, jitter_sigma=0.0))
+    m = sim.run()
+    assert m.n_completed == len(reqs)
+    for r in sched.completed:
+        assert sim.token_ledger[r.req_id] == \
+            [r.prompt_tokens, r.observed_output_tokens]
+        assert r.observed_output_tokens == min(r.true_output_tokens,
+                                               r.max_tokens)
+
+
 @given(st.integers(min_value=1, max_value=4096))
 def test_elastic_plan_always_uses_most_chips(n):
     plan = elastic_plan(n, model_parallel=16)

@@ -1,0 +1,321 @@
+"""Iteration-level execution core: step-time decomposition, atomic
+parity, token conservation, chunked-prefill TTFT behaviour, mid-flight
+joins, iteration-boundary preemption, and the cluster threading."""
+
+from dataclasses import replace
+
+import pytest
+
+from repro.cluster import ClusterConfig, ClusterSimulator
+from repro.core.estimator import DriftConfig
+from repro.core.request import Category, Request, TenantTier
+from repro.core.scheduler import DriftScheduler
+from repro.serving.cost_model import L4_MAX_DRIVEN, L4_QWEN_1_8B
+from repro.serving.simulator import SimConfig, WorkerSimulator
+from repro.workload.generator import (GeneratorConfig, WorkloadGenerator,
+                                      cluster_stress_config)
+
+# zero-jitter calibrations: the parity/monotonicity properties are about
+# the execution-model decomposition, not the lognormal noise on top
+NOJIT_SUM = replace(L4_QWEN_1_8B, jitter_sigma=0.0)
+NOJIT_MAX = replace(L4_MAX_DRIVEN, jitter_sigma=0.0)
+
+# long-prompt stress traffic (RAG/agent scale) — the regime where
+# per-iteration prefill budgets have teeth
+STRESS = GeneratorConfig(total_requests=240, calibration_requests=80,
+                         seed=7, prompt_tokens_scale=16.0)
+
+
+def _run(*, step_engine, joins=True, chunk=None, cost=NOJIT_SUM,
+         gen_cfg=STRESS, seed=7, policy="fifo", **sim_kw):
+    plan = WorkloadGenerator(gen_cfg).plan(seed=seed)
+    sched = DriftScheduler(policy=policy, config=DriftConfig())
+    sim = WorkerSimulator(
+        sched, plan,
+        SimConfig(seed=seed, step_engine=step_engine,
+                  continuous_joins=joins, chunk_prefill_tokens=chunk,
+                  **sim_kw),
+        cost_model=cost)
+    return sched, sim, sim.run()
+
+
+# --- cost model: step_time is the primitive, batch_time the view -------
+
+def _decomposed_batch_time(cost, reqs):
+    """Sum step_time over the iterations of an atomic batch run: every
+    prompt prefills in iteration 1, slot i emits in iterations
+    1..out_i."""
+    outs = sorted(min(r.true_output_tokens, r.max_tokens) for r in reqs)
+    total = cost.step_time(len(outs), sum(r.prompt_tokens for r in reqs),
+                           include_base=True)
+    prev = 0
+    alive = len(outs)
+    for i, out in enumerate(outs):
+        # iterations prev+1..out run with `alive` emitting slots; the
+        # first iteration was already priced above
+        span = out - max(prev, 1) if prev == 0 else out - prev
+        if span > 0:
+            total += span * cost.step_time(alive)
+        prev = max(prev, out)
+        alive -= 1
+    return total
+
+
+@pytest.mark.parametrize("cost", [NOJIT_SUM, NOJIT_MAX],
+                         ids=["sum_dominated", "batch_walk"])
+def test_batch_time_is_telescoped_step_time(cost):
+    plan = WorkloadGenerator(STRESS).plan(seed=3)
+    reqs = [r for _, r in plan][:32]
+    assert _decomposed_batch_time(cost, reqs) == pytest.approx(
+        cost.batch_time(reqs), rel=1e-9)
+    # singleton + empty edge cases
+    assert _decomposed_batch_time(cost, reqs[:1]) == pytest.approx(
+        cost.batch_time(reqs[:1]), rel=1e-9)
+    assert cost.batch_time([]) == 0.0
+    assert cost.step_time(0, 0) == 0.0
+
+
+# --- parity: step engine degenerates to the atomic contract ------------
+
+@pytest.mark.parametrize("cost", [NOJIT_SUM, NOJIT_MAX],
+                         ids=["sum_dominated", "batch_walk"])
+def test_parity_mode_reproduces_atomic_batches(cost):
+    """chunk budget = inf + joins off must reproduce the legacy
+    atomic-batch e2e latencies (exactly, modulo float summation order:
+    jitter is zeroed so the only difference is per-iteration vs
+    closed-form pricing)."""
+    sa, xa, ma = _run(step_engine=False, cost=cost)
+    sb, xb, mb = _run(step_engine=True, joins=False, chunk=None, cost=cost)
+    assert ma.n_completed == mb.n_completed == 240
+    # req_ids are a process-global counter: align the two runs by their
+    # per-run ordering (plans are generated identically)
+    ea = [lat for _, lat in sorted((r.req_id, r.e2e_latency)
+                                   for r in sa.completed)]
+    eb = [lat for _, lat in sorted((r.req_id, r.e2e_latency)
+                                   for r in sb.completed)]
+    assert ea == pytest.approx(eb, rel=1e-9)
+    ga = [lat for _, lat in sorted((r.req_id, r.gpu_latency)
+                                   for r in sa.completed)]
+    gb = [lat for _, lat in sorted((r.req_id, r.gpu_latency)
+                                   for r in sb.completed)]
+    assert ga == pytest.approx(gb, rel=1e-9)
+    assert ma.gpu_utilization == pytest.approx(mb.gpu_utilization, rel=1e-9)
+
+
+def test_parity_mode_close_under_jitter():
+    """With the default lognormal jitter the two paths consume rng
+    differently (per-step vs per-batch draws), but the distributions
+    must stay within jitter tolerance."""
+    _, _, ma = _run(step_engine=False, cost=L4_QWEN_1_8B)
+    _, _, mb = _run(step_engine=True, joins=False, chunk=None,
+                    cost=L4_QWEN_1_8B)
+    assert mb.e2e.p50 == pytest.approx(ma.e2e.p50, rel=0.05)
+    assert mb.e2e.mean == pytest.approx(ma.e2e.mean, rel=0.05)
+
+
+# --- token accounting conservation -------------------------------------
+
+@pytest.mark.parametrize("chunk", [None, 512, 64],
+                         ids=["inf", "512", "64"])
+def test_token_accounting_conserves(chunk):
+    """Per-step prefill + decode emissions must sum to exactly each
+    request's prompt + observed output — chunking reschedules tokens,
+    never creates or drops them."""
+    sched, sim, m = _run(step_engine=True, joins=True, chunk=chunk)
+    assert m.n_completed == 240
+    for r in sched.completed:
+        assert sim.token_ledger[r.req_id] == \
+            [r.prompt_tokens, r.observed_output_tokens]
+    # observed == planned oracle length on the failure-free path
+    assert all(r.observed_output_tokens ==
+               min(r.true_output_tokens, r.max_tokens)
+               for r in sched.completed)
+
+
+# --- TTFT behaviour ----------------------------------------------------
+
+def test_step_engine_reports_real_ttft():
+    """Unified replicas on the step engine anchor TTFT at the iteration
+    that emitted the first token — strictly before batch-drain e2e."""
+    sched, sim, m = _run(step_engine=True, joins=True, chunk=512)
+    assert all(r.prefill_end is not None for r in sched.completed)
+    assert all(r.ttft <= r.e2e_latency + 1e-12 for r in sched.completed)
+    mean_ttft = sum(r.ttft for r in sched.completed) / 240
+    assert mean_ttft < 0.8 * m.e2e.mean
+    assert sim.n_joins > 0           # mid-flight admission actually ran
+
+
+@pytest.mark.parametrize("cost", [NOJIT_SUM, NOJIT_MAX],
+                         ids=["sum_dominated", "batch_walk"])
+def test_ttft_monotone_in_chunk_budget(cost):
+    """Down to the per-iteration overhead floor (~c_decode_max /
+    c_prefill tokens), a smaller chunk budget never worsens mean TTFT
+    under the bursty long-prompt stress workload: serialized prefill
+    chunks mean early joiners stop waiting for the whole wave's
+    prompts. (Below the floor the extra iteration walk overhead
+    dominates — bench_chunked_prefill shows the full U-shape.)"""
+    burst = GeneratorConfig(total_requests=128, calibration_requests=32,
+                            calibration_rate=200.0, stress_rate=200.0,
+                            seed=11, prompt_tokens_scale=32.0)
+    means = []
+    for chunk in (None, 8192, 4096, 2048):
+        sched, _, m = _run(step_engine=True, joins=True, chunk=chunk,
+                           cost=cost, gen_cfg=burst, seed=11)
+        assert m.n_completed == 128
+        means.append(sum(r.ttft for r in sched.completed) / 128)
+    for wider, tighter in zip(means, means[1:]):
+        assert tighter <= wider * (1 + 1e-9), means
+
+
+# --- joins, preemption, scheduler knob ---------------------------------
+
+def test_continuous_joins_beat_atomic_batches_end_to_end():
+    _, _, atomic = _run(step_engine=False, cost=NOJIT_MAX)
+    _, sim, cont = _run(step_engine=True, joins=True, chunk=None,
+                        cost=NOJIT_MAX)
+    assert cont.n_completed == atomic.n_completed == 240
+    assert sim.n_joins > 0
+    # freed slots refill instead of walking to the batch's longest
+    # member: strictly better median e2e in the batch-walk regime
+    assert cont.e2e.p50 < atomic.e2e.p50
+
+
+def test_step_engine_failure_preempts_at_iteration_boundary():
+    sched, sim, m = _run(step_engine=True, joins=True, chunk=512,
+                         fail_times=(10.0, 60.0), repair_time=15.0)
+    assert m.n_completed == 240                  # nothing lost
+    assert m.n_failed_dispatches > 0             # the abort actually hit
+    retried = [r for r in sched.completed if r.retries > 0]
+    assert retried
+    # at-most-once drift feedback despite preemption + retries
+    assert sum(sched.bias_store.update_counts().values()) == 240
+    # conservation still holds: aborted iterations were discarded and
+    # the retry re-ran from scratch
+    for r in sched.completed:
+        assert sim.token_ledger[r.req_id] == \
+            [r.prompt_tokens, r.observed_output_tokens]
+
+
+def test_max_new_per_step_caps_iteration_admission():
+    sched = DriftScheduler(policy="fifo", max_new_per_step=2)
+    for i in range(8):
+        sched.submit(Request(tenant=TenantTier.STANDARD,
+                             category=Category.SHORT_QA,
+                             prompt="what is dns"), now=0.0)
+    assert len(sched.dispatch_step(0.0, 6)) == 2    # knob binds
+    assert len(sched.dispatch_step(0.0, 1)) == 1    # free slots bind
+    uncapped = DriftScheduler(policy="fifo")
+    for i in range(4):
+        uncapped.submit(Request(tenant=TenantTier.STANDARD,
+                                category=Category.SHORT_QA,
+                                prompt="what is dns"), now=0.0)
+    assert len(uncapped.dispatch_step(0.0, 8)) == 4
+    with pytest.raises(ValueError):
+        DriftScheduler(policy="fifo", max_new_per_step=0)
+
+
+def test_step_engine_rejects_hedge_and_bad_chunk():
+    sched = DriftScheduler()
+    with pytest.raises(ValueError):
+        WorkerSimulator(sched, config=SimConfig(step_engine=True,
+                                                hedge=True))
+    with pytest.raises(ValueError):
+        WorkerSimulator(sched, config=SimConfig(step_engine=True,
+                                                chunk_prefill_tokens=0))
+    # a chunk budget on the atomic path would be silently ignored —
+    # refused instead of misread as "chunking has no effect"
+    with pytest.raises(ValueError, match="step_engine"):
+        WorkerSimulator(sched, config=SimConfig(step_engine=False,
+                                                chunk_prefill_tokens=512))
+
+
+# --- telemetry memory model --------------------------------------------
+
+def test_memory_telemetry_tracks_kv_occupancy():
+    """gpu_mem_gb = plateau + workspace scaled by paged-KV occupancy:
+    it must move with load (not the old constant-per-fill formula) and
+    stay on the paper's observed plateau band."""
+    _, sim, _ = _run(step_engine=True, joins=True, chunk=512)
+    busy = [t.gpu_mem_gb for t in sim.telemetry if t.gpu_util > 0.5]
+    assert busy
+    assert all(13.5 < m_ < 15.5 for m_ in busy)
+    assert max(busy) - min(busy) > 0.01          # occupancy moves it
+    idle = [t.gpu_mem_gb for t in sim.telemetry if t.gpu_util <= 0.5]
+    if idle:
+        assert all(m_ == pytest.approx(14.0) for m_ in idle)
+
+
+# --- cluster threading --------------------------------------------------
+
+def _cluster_run(seed=1, n=4, total=300, **cfg_kw):
+    cfg = ClusterConfig(n_replicas=n, seed=seed, step_engine=True,
+                        **cfg_kw)
+    gen = WorkloadGenerator(cluster_stress_config(
+        n, seed=seed, total_requests=total, prompt_tokens_scale=8.0))
+    sim = ClusterSimulator(plan=gen.plan(seed=seed), config=cfg,
+                           cost_model=L4_MAX_DRIVEN)
+    return sim, sim.run()
+
+
+def test_cluster_step_engine_unified_honest_ttft():
+    sim, m = _cluster_run(routing="least_loaded",
+                          chunk_prefill_tokens=512)
+    assert m.run.n_completed == 300
+    # honest TTFT: strictly below e2e now, not degraded to batch end
+    assert m.ttft.p50 < 0.5 * m.run.e2e.p50
+    # at-most-once drift feedback across the pool
+    assert sum(sim.estimator.bias_store.update_counts().values()) == 300
+
+
+def test_cluster_step_engine_determinism():
+    _, a = _cluster_run(seed=3, routing="least_loaded",
+                        chunk_prefill_tokens=256)
+    _, b = _cluster_run(seed=3, routing="least_loaded",
+                        chunk_prefill_tokens=256)
+    assert a.as_dict() == b.as_dict()
+
+
+def test_cluster_step_engine_pd_contract_survives():
+    """P/D on the step engine: handoffs fire per retired prefill slot,
+    drift feedback still fires exactly once, attributed to decode."""
+    sim, m = _cluster_run(routing="pd_disaggregated",
+                          chunk_prefill_tokens=512)
+    assert m.run.n_completed == 300
+    assert m.n_handoffs == 300
+    done = [r for rep in sim.replicas for r in rep.sched.completed]
+    assert all(r.prefill_end is not None and r.handoff_time is not None
+               and r.prefill_rid != r.decode_rid for r in done)
+    assert all(r.ttft < r.e2e_latency for r in done)
+    phases = {}
+    for rep in sim.replicas:
+        for k, v in rep.sched.phase_feedback_counts.items():
+            phases[k] = phases.get(k, 0) + v
+    assert phases == {"decode": 300}
+    assert sum(sim.estimator.bias_store.update_counts().values()) == 300
+
+
+def test_cluster_step_engine_failure_recovery():
+    sim, m = _cluster_run(routing="pd_disaggregated",
+                          chunk_prefill_tokens=512,
+                          fail_events=((15.0, 2),), repair_time=25.0)
+    assert m.run.n_completed == 300
+    assert m.n_rerouted > 0
+    assert sum(sim.estimator.bias_store.update_counts().values()) == 300
+
+
+def test_max_new_per_step_threads_through_cluster():
+    sim, m = _cluster_run(routing="least_loaded", max_new_per_step=2)
+    assert m.run.n_completed == 300
+    assert all(rep.sched.max_new_per_step == 2 for rep in sim.replicas)
+
+
+# --- satellite: the stale serving alias is gone ------------------------
+
+def test_serving_cluster_simulator_alias_removed():
+    import repro.serving.simulator as srv_sim
+    with pytest.raises(ImportError, match="repro.cluster"):
+        srv_sim.ClusterSimulator
+    with pytest.raises(ImportError):
+        from repro.serving import ClusterSimulator  # noqa: F401
+    with pytest.raises(AttributeError):
+        srv_sim.definitely_not_a_symbol
