@@ -25,8 +25,8 @@ import time
 from . import (bench_bias_convergence, bench_chunked_prefill,
                bench_cluster_routing, bench_drift_error,
                bench_fault_tolerance, bench_gpu_exec_latency,
-               bench_pd_disagg, bench_queue_dynamics, bench_roofline,
-               bench_semantic_runtime, bench_tail_latency,
+               bench_pd_disagg, bench_prefix_cache, bench_queue_dynamics,
+               bench_roofline, bench_semantic_runtime, bench_tail_latency,
                bench_tenant_qos, bench_wait_by_class)
 
 BENCHES = [
@@ -42,6 +42,7 @@ BENCHES = [
     ("cluster_routing (beyond-paper)", bench_cluster_routing),
     ("pd_disagg (beyond-paper)", bench_pd_disagg),
     ("chunked_prefill (beyond-paper)", bench_chunked_prefill),
+    ("prefix_cache (beyond-paper)", bench_prefix_cache),
     ("roofline (deliverable g)", bench_roofline),
 ]
 

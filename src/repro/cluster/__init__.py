@@ -5,11 +5,11 @@ the same state machine out to N replicas without changing it:
 
 * :mod:`replica`    — the execution-agnostic replica surface (state,
   estimated-token mass, worker signals) routing and scaling reason over;
-* :mod:`router`     — ``ClusterRouter`` with five pluggable policies
+* :mod:`router`     — ``ClusterRouter`` with six pluggable policies
   (``round_robin`` / ``least_loaded`` / ``drift_aware`` /
-  ``tenant_affinity`` / ``pd_disaggregated``), all priced by the
-  *shared* ``AdaptiveTokenEstimator``, plus the cross-replica
-  work-stealing protocol;
+  ``tenant_affinity`` / ``prefix_aware`` / ``pd_disaggregated``), all
+  priced by the *shared* ``AdaptiveTokenEstimator``, plus the
+  cross-replica work-stealing protocol;
 * :mod:`admission`  — ``GlobalAdmission``: per-tenant token-bucket rate
   limits in estimated budget tokens, cluster-depth backpressure, and
   per-tier shed accounting;
@@ -35,16 +35,17 @@ from .autoscaler import (Autoscaler, AutoscalerConfig, RoleAutoscaler,
 from .metrics import ClusterMetrics, ReplicaStats, summarize_cluster
 from .replica import Replica, ReplicaRole, ReplicaState
 from .router import (ClusterRouter, DriftAwareRouting, LeastLoadedRouting,
-                     PDDisaggregatedRouting, ROUTING_POLICIES,
-                     RoundRobinRouting, RoutingPolicy, StealPlan,
-                     TenantAffinityRouting, make_routing_policy)
+                     PDDisaggregatedRouting, PrefixAwareRouting,
+                     ROUTING_POLICIES, RoundRobinRouting, RoutingPolicy,
+                     StealPlan, TenantAffinityRouting, make_routing_policy)
 from .simulator import ClusterConfig, ClusterSimulator, Handoff, SimReplica
 
 __all__ = [
     "AdmissionConfig", "Autoscaler", "AutoscalerConfig", "ClusterConfig",
     "ClusterMetrics", "ClusterRouter", "ClusterSimulator",
     "DriftAwareRouting", "GlobalAdmission", "Handoff",
-    "LeastLoadedRouting", "PDDisaggregatedRouting", "ROUTING_POLICIES",
+    "LeastLoadedRouting", "PDDisaggregatedRouting", "PrefixAwareRouting",
+    "ROUTING_POLICIES",
     "Replica", "ReplicaRole", "ReplicaState", "ReplicaStats",
     "RoleAutoscaler", "RoleAutoscalerConfig", "RoundRobinRouting",
     "RoutingPolicy", "SHED_BACKPRESSURE", "SHED_NO_REPLICA",

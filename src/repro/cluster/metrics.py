@@ -35,6 +35,14 @@ class ReplicaStats:
     n_handoffs_out: int = 0
     n_stolen_in: int = 0
     n_stolen_away: int = 0
+    # shared-prefix KV cache counters (all zero when disabled):
+    # request-granular hits/misses, prefill tokens served from cache,
+    # LRU-evicted pages, failure-driven cache wipes
+    n_prefix_hits: int = 0
+    n_prefix_misses: int = 0
+    prefix_tokens_saved: int = 0
+    prefix_evicted_pages: int = 0
+    prefix_invalidations: int = 0
 
     def as_dict(self) -> dict:
         """JSON-ready flat dict (benchmark --json capture)."""
@@ -44,7 +52,12 @@ class ReplicaStats:
                 "n_handoffs_in": self.n_handoffs_in,
                 "n_handoffs_out": self.n_handoffs_out,
                 "n_stolen_in": self.n_stolen_in,
-                "n_stolen_away": self.n_stolen_away}
+                "n_stolen_away": self.n_stolen_away,
+                "n_prefix_hits": self.n_prefix_hits,
+                "n_prefix_misses": self.n_prefix_misses,
+                "prefix_tokens_saved": self.prefix_tokens_saved,
+                "prefix_evicted_pages": self.prefix_evicted_pages,
+                "prefix_invalidations": self.prefix_invalidations}
 
 
 @dataclass
@@ -62,9 +75,19 @@ class ClusterMetrics:
       the head-of-line effect both disaggregation and chunked-prefill
       continuous batching remove (compare them head-to-head with
       ``benchmarks.bench_chunked_prefill``).
-    * ``decode`` — KV arrival on the decode replica → completion
-      (decode queueing + execution); only P/D requests have it.
+    * ``decode`` — decode-phase span: KV arrival on the decode replica
+      → completion on the P/D path (decode queueing + execution), first
+      token → completion on step-engine unified replicas; empty only on
+      legacy atomic unified runs.
+    * ``inter_token`` — per-request mean inter-token gap (the decode
+      span over its ``observed - 1`` gaps): the streaming-jitter stat
+      TTFT alone cannot show. Same anchors as ``decode``.
     * ``kv_transfer`` — modeled prefill→decode transfer time.
+
+    ``prefix_cache`` aggregates the shared-prefix KV-reuse counters
+    across replicas (request hit rate, prefill tokens served from
+    cache, LRU evictions, failure invalidations); all zero when
+    ``ClusterConfig.prefix_cache`` is off.
     """
 
     routing: str
@@ -77,10 +100,12 @@ class ClusterMetrics:
     n_rerouted: int
     ttft: LatencyStats = field(default_factory=LatencyStats)
     decode: LatencyStats = field(default_factory=LatencyStats)
+    inter_token: LatencyStats = field(default_factory=LatencyStats)
     kv_transfer: LatencyStats = field(default_factory=LatencyStats)
     n_handoffs: int = 0
     n_handoffs_lost: int = 0
     n_stolen: int = 0
+    prefix_cache: dict = field(default_factory=dict)
 
     @property
     def shed_rate(self) -> float:
@@ -100,10 +125,12 @@ class ClusterMetrics:
             "n_rerouted": self.n_rerouted,
             "ttft": self.ttft.as_dict(),
             "decode": self.decode.as_dict(),
+            "inter_token": self.inter_token.as_dict(),
             "kv_transfer": self.kv_transfer.as_dict(),
             "n_handoffs": self.n_handoffs,
             "n_handoffs_lost": self.n_handoffs_lost,
             "n_stolen": self.n_stolen,
+            "prefix_cache": dict(self.prefix_cache),
         }
 
 
@@ -131,17 +158,29 @@ def summarize_cluster(routing: str, policy: str, bias_enabled: bool,
                                    / max(len(replica_busy_time), 1)),
                         n_failed_dispatches=n_failed_dispatches)
     makespan = max(run.makespan, 1e-9)
-    stats = [
-        ReplicaStats(
+    stats = []
+    prefix_totals = {"hits": 0, "misses": 0, "tokens_saved": 0,
+                     "evicted_pages": 0, "invalidations": 0}
+    for r in replicas:
+        pc = r.prefix_cache_stats()
+        for k in prefix_totals:
+            prefix_totals[k] += pc.get(k, 0)
+        stats.append(ReplicaStats(
             rid=r.rid, state=r.state.value, role=r.role.value,
             n_routed=r.n_routed,
             n_completed=replica_completed.get(r.rid, 0),
             busy_time=replica_busy_time.get(r.rid, 0.0),
             utilization=replica_busy_time.get(r.rid, 0.0) / makespan,
             n_handoffs_in=r.n_handoffs_in, n_handoffs_out=r.n_handoffs_out,
-            n_stolen_in=r.n_stolen_in, n_stolen_away=r.n_stolen_away)
-        for r in replicas
-    ]
+            n_stolen_in=r.n_stolen_in, n_stolen_away=r.n_stolen_away,
+            n_prefix_hits=pc.get("hits", 0),
+            n_prefix_misses=pc.get("misses", 0),
+            prefix_tokens_saved=pc.get("tokens_saved", 0),
+            prefix_evicted_pages=pc.get("evicted_pages", 0),
+            prefix_invalidations=pc.get("invalidations", 0)))
+    probed = prefix_totals["hits"] + prefix_totals["misses"]
+    prefix_totals["hit_rate"] = (prefix_totals["hits"] / probed
+                                 if probed else 0.0)
     from .replica import ReplicaState
     n_end = sum(1 for r in replicas
                 if r.state in (ReplicaState.ACTIVE, ReplicaState.STARTING))
@@ -159,9 +198,12 @@ def summarize_cluster(routing: str, policy: str, bias_enabled: bool,
         n_rerouted=n_rerouted,
         ttft=LatencyStats.of([r.ttft for r in completed]),
         decode=LatencyStats.of([r.decode_latency for r in completed]),
+        inter_token=LatencyStats.of(
+            [r.inter_token_latency for r in completed]),
         kv_transfer=LatencyStats.of(
             [r.kv_transfer_latency for r in completed]),
         n_handoffs=n_handoffs,
         n_handoffs_lost=n_handoffs_lost,
         n_stolen=n_stolen,
+        prefix_cache=prefix_totals,
     )

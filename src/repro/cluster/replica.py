@@ -125,6 +125,22 @@ class Replica:
         """Estimated budget tokens (Eq. 1) currently executing."""
         return sum(_budget(r) for r in self.inflight_requests())
 
+    def prefix_cached_tokens(self, req: Request) -> int:
+        """Resident shared-prefix overlap this replica's KV cache holds
+        for ``req``, in tokens — THE warmth signal ``prefix_aware``
+        routing scores (0 on the base class: no execution backend, no
+        cache). Must be a pure probe: called once per routable replica
+        per placement, it must not perturb LRU or refcount state."""
+        return 0
+
+    def prefix_cache_stats(self) -> dict:
+        """Cumulative prefix-cache counters (hits / misses /
+        tokens_saved / evicted_pages / resident_pages / invalidations);
+        all zero without a cache-backed executor."""
+        return {"hits": 0, "misses": 0, "tokens_saved": 0,
+                "evicted_pages": 0, "resident_pages": 0,
+                "invalidations": 0}
+
     def token_mass(self) -> float:
         """Total outstanding estimated work (queued + executing)."""
         return self.queued_token_mass() + self.inflight_token_mass()

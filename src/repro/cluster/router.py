@@ -17,6 +17,12 @@ surface:
 * ``tenant_affinity`` — keeps a tenant's stream on its warm replica
   (stable tenant -> replica mapping), spilling to the least-loaded
   replica when the warm one is overloaded.
+* ``prefix_aware``    — scores replicas by *measured* resident-prefix
+  overlap (tokens of the request's shared prompt prefix already in the
+  replica's radix KV cache — the thing that actually makes a replica
+  warm), seeding cold prefix groups onto a stable group ring and
+  spilling to least-loaded under imbalance. See
+  :class:`PrefixAwareRouting`.
 * ``pd_disaggregated`` — two-stage prefill/decode placement over a
   role-split pool: new requests go to prefill replicas (by prompt-token
   load), prefilled requests hand off to decode replicas (by estimated
@@ -34,6 +40,7 @@ ties break toward the lowest ``rid``.
 from __future__ import annotations
 
 import math
+import zlib
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
@@ -192,6 +199,67 @@ class TenantAffinityRouting(RoutingPolicy):
         return min(replicas, key=lambda r: (r.token_mass(), r.rid))
 
 
+class PrefixAwareRouting(RoutingPolicy):
+    """Shared-prefix KV-reuse routing: follow the resident pages.
+
+    ``tenant_affinity`` models warmth as stickiness; this policy
+    measures it. Each replica exposes
+    :meth:`~repro.cluster.replica.Replica.prefix_cached_tokens` — the
+    tokens of the request's shared prompt prefix already resident in
+    its radix KV cache (``ClusterConfig.prefix_cache``) — and placement
+    follows three rules, in order:
+
+    1. **Follow residency.** The replica with the largest resident
+       overlap wins (ties to the lowest rid): every overlapping token
+       is prefill work the cluster never re-pays, and the admission
+       estimate prices the request's uncached suffix accordingly
+       (``Request.expected_cached_tokens``, stamped by the cluster
+       simulator at placement).
+    2. **Seed cold groups deterministically.** A prefix group nobody
+       holds yet maps onto the rid ring by a stable content hash
+       (crc32 — NOT Python's salted ``hash``; placement must be
+       reproducible across runs), so a group's stream concentrates and
+       builds residency instead of spraying one cold miss onto every
+       replica. SageServe's observation, applied at the router:
+       cache state must be *built* by placement, not just consulted.
+    3. **Spill on overload.** Either preference yields to the
+       least-loaded replica when its outstanding mass (Eq. 1 tokens)
+       exceeds ``spill_factor`` x the routable mean — work conservation
+       beats warmth, exactly like ``tenant_affinity``'s spill.
+
+    Requests with no shareable prefix route least-loaded. Residency
+    probes are pure reads (no LRU/refcount perturbation), so scoring N
+    replicas per placement cannot distort eviction order.
+    """
+
+    name = "prefix_aware"
+
+    def __init__(self, spill_factor: float = 1.5) -> None:
+        self.spill_factor = float(spill_factor)
+
+    def select(self, replicas, req, est_budget, now):
+        """Max resident-prefix overlap -> stable group-ring seed ->
+        least-loaded spill (see class docstring)."""
+        mean_mass = sum(r.token_mass() for r in replicas) / len(replicas)
+
+        def overloaded(r: Replica) -> bool:
+            return r.token_mass() > self.spill_factor * max(mean_mass, 1.0)
+
+        if req.prefix_group is not None and req.shared_prefix_tokens > 0:
+            overlaps = {r.rid: r.prefix_cached_tokens(req)
+                        for r in replicas}
+            best = max(replicas, key=lambda r: (overlaps[r.rid], -r.rid))
+            if overlaps[best.rid] > 0 and not overloaded(best):
+                return best
+            target = zlib.crc32(repr(req.prefix_group).encode()) \
+                % (replicas[-1].rid + 1)
+            warm = next((r for r in replicas if r.rid >= target),
+                        replicas[0])
+            if not overloaded(warm):
+                return warm
+        return min(replicas, key=lambda r: (r.token_mass(), r.rid))
+
+
 class PDDisaggregatedRouting(RoutingPolicy):
     """Prefill/decode-disaggregated two-stage placement.
 
@@ -240,7 +308,7 @@ class PDDisaggregatedRouting(RoutingPolicy):
 ROUTING_POLICIES: Dict[str, type] = {
     p.name: p for p in (RoundRobinRouting, LeastLoadedRouting,
                         DriftAwareRouting, TenantAffinityRouting,
-                        PDDisaggregatedRouting)
+                        PrefixAwareRouting, PDDisaggregatedRouting)
 }
 
 

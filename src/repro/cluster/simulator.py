@@ -8,8 +8,17 @@ single seed:
     arrival -> GlobalAdmission (rate limits, backpressure; shed or pass)
             -> ClusterRouter   (round_robin / least_loaded /
                                 drift_aware / tenant_affinity /
-                                pd_disaggregated)
+                                prefix_aware / pd_disaggregated)
             -> replica's DriftScheduler -> replica workers
+
+With ``ClusterConfig.prefix_cache=True`` (step engine required) every
+replica models a radix shared-prefix KV cache: placement stamps the
+chosen replica's resident-prefix overlap into
+``Request.expected_cached_tokens`` (the admission estimate prices only
+the uncached suffix), prefill starts at the cached boundary, and
+``prefix_aware`` routing scores replicas by measured residency. A
+replica failure wipes that replica's cache along with its KV pool —
+stranded work re-prefills in full wherever it lands.
 
 Under ``pd_disaggregated`` routing the lifecycle is two-stage: the
 request prefills on a PREFILL-role replica, its KV moves to a
@@ -89,6 +98,15 @@ class ClusterConfig:
     chunk_prefill_tokens: Optional[int] = None
     continuous_joins: bool = True
     max_new_per_step: Optional[int] = None
+    # --- shared-prefix KV cache (radix tree per replica; requires
+    # step_engine). Replicas skip prefilling resident full pages of a
+    # request's shared prompt prefix; `prefix_aware` routing scores
+    # replicas by that residency; the router stamps the chosen
+    # replica's overlap into Request.expected_cached_tokens so the
+    # admission estimate prices only the uncached suffix. Replica
+    # failure invalidates the replica's whole cache (KV dies with it).
+    prefix_cache: bool = False
+    prefix_cache_pages: int = 4096
     control_interval: float = 1.0     # autoscaler / telemetry cadence
     max_time: float = 1e6             # hard stop against pathological stalls
     # replica-level fault injection: (absolute time, replica id)
@@ -152,6 +170,14 @@ class SimReplica(Replica):
     def is_idle(self) -> bool:
         """True when nothing is queued or in flight here."""
         return self.sim.is_idle()
+
+    def prefix_cached_tokens(self, req: Request) -> int:
+        """Resident shared-prefix overlap in this replica's KV cache
+        (pure probe — see the base class contract)."""
+        return self.sim.prefix_cached_tokens(req)
+
+    def prefix_cache_stats(self) -> dict:
+        return self.sim.prefix_cache_stats()
 
     def accept(self, req: Request, now: float) -> None:
         """Admit a routed request (full admission path: estimate, log,
@@ -309,6 +335,8 @@ class ClusterSimulator:
                 step_engine=self.cfg.step_engine,
                 chunk_prefill_tokens=self.cfg.chunk_prefill_tokens,
                 continuous_joins=self.cfg.continuous_joins,
+                prefix_cache=self.cfg.prefix_cache,
+                prefix_cache_pages=self.cfg.prefix_cache_pages,
                 phase=phase,
                 repair_time=self.cfg.repair_time,
                 seed=self.cfg.seed),
@@ -403,6 +431,10 @@ class ClusterSimulator:
             else:
                 self.admission.shed_no_replica(req, est, now)
             return
+        # the chosen replica's resident-prefix overlap prices the
+        # admission estimate: only the uncached suffix is budgeted
+        # (0 without a prefix cache — the estimate is then unchanged)
+        req.expected_cached_tokens = target.prefix_cached_tokens(req)
         target.accept(req, now)
 
     def _on_replica_event(self, rid: int, rkind: str, rpayload,
@@ -548,11 +580,30 @@ class ClusterSimulator:
                           now: float) -> None:
         """Route one stranded request off ``rep``; with the whole pool
         down it parks on the failed replica and is served after
-        repair."""
+        repair.
+
+        The admission estimate travels with the request (no re-pricing
+        of its bias-derived parts — the at-most-once contract), but the
+        *cache discount* inside it belonged to the dead replica's
+        residency, which no longer exists: restore the full-prompt
+        budget, then re-discount by the surviving replica's own
+        resident overlap. A re-prefill is priced where it will actually
+        run."""
+        est = req.estimate
+        if est is not None and est.cached_tokens:
+            est.t_budget += est.cached_tokens
+            est.cached_tokens = 0
+            req.expected_cached_tokens = 0
         target = self.router.route(self.replicas, req, now, exclude=(rep,))
         if target is None:
             rep.sched.queues.enqueue(req, req.enqueue_time, front=True)
             return
+        if est is not None:
+            overlap = target.prefix_cached_tokens(req)
+            if overlap:
+                est.t_budget -= overlap
+                est.cached_tokens = overlap
+                req.expected_cached_tokens = overlap
         rep.n_rerouted_away += 1
         self.n_rerouted += 1
         target.accept_reroute(req, now)

@@ -58,8 +58,12 @@ class AdmissionController:
             req.prompt_tokens = count_tokens(req.prompt)
         req.arrival_time = now
         req.seq = next(self._seq)
+        # expected_cached_tokens is the resident-prefix overlap the
+        # router observed on this replica at placement (0 without a
+        # prefix cache): the budget prices only the uncached suffix
         req.estimate = self.estimator.estimate(
-            req.category, req.tenant, req.prompt_tokens
+            req.category, req.tenant, req.prompt_tokens,
+            cached_tokens=req.expected_cached_tokens,
         )
         self.queues.enqueue(req, now)
         self.log.append(AdmissionRecord(

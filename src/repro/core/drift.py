@@ -34,6 +34,20 @@ class DriftSample:
     # serving phase that observed the output length ("unified", or
     # "decode" when a P/D decode replica saw the request finish)
     phase: str = "unified"
+    # prefix-cache attribution: the overlap priced into t_budget at
+    # placement vs the hit actually taken at prefill. The bias EMA is
+    # cache-neutral by construction — feedback is observed OUTPUT
+    # tokens (Eq. 6), which a cached prefill does not change — so cache
+    # luck can never masquerade as systematic output drift; these
+    # fields exist so budget-error analyses can split the hit/miss
+    # populations (and audit expectation-vs-realization) instead of
+    # averaging cache fortune into the drift numbers.
+    expected_cached_tokens: int = 0
+    cached_tokens: int = 0
+
+    @property
+    def cache_hit(self) -> bool:
+        return self.cached_tokens > 0
 
     @property
     def error(self) -> float:
@@ -76,6 +90,8 @@ class DriftTracker:
             t_budget=req.estimate.t_budget,
             prompt_tokens=req.prompt_tokens,
             phase=phase,
+            expected_cached_tokens=req.estimate.cached_tokens,
+            cached_tokens=req.cached_prompt_tokens,
         )
         self.samples.append(s)
         return s
@@ -96,6 +112,24 @@ class DriftTracker:
 
     def per_category(self) -> Dict[str, ErrorStats]:
         return {c.value: self.stats(c) for c in Category}
+
+    def per_cache_outcome(self) -> Dict[str, ErrorStats]:
+        """Estimation error split by prefix-cache outcome, so cache
+        luck is inspectable instead of averaged into the drift numbers
+        (output-bias calibration itself is cache-neutral: Eq. 6 feeds
+        on observed output tokens only)."""
+        def _stats(sel: List[DriftSample]) -> ErrorStats:
+            if not sel:
+                return ErrorStats()
+            n = len(sel)
+            return ErrorStats(
+                n=n,
+                mae=sum(s.abs_error for s in sel) / n,
+                rmse=math.sqrt(sum(s.error ** 2 for s in sel) / n),
+                mean_error=sum(s.error for s in sel) / n)
+        return {"hit": _stats([s for s in self.samples if s.cache_hit]),
+                "miss": _stats([s for s in self.samples
+                                if not s.cache_hit])}
 
     def misclassification_rate(self, classify_fn) -> float:
         """Fraction of requests whose *runtime* class (from the observed

@@ -175,14 +175,22 @@ class AdaptiveTokenEstimator:
 
     # -- Algorithm 2 ----------------------------------------------------
     def estimate(self, category: Category, tenant: TenantTier,
-                 prompt_tokens: int) -> Estimate:
+                 prompt_tokens: int, cached_tokens: int = 0) -> Estimate:
+        """Admission-time estimate (Eq. 1-2). ``cached_tokens`` is the
+        prompt prefix expected to be resident in the target replica's
+        KV cache (set by prefix-aware placement): those tokens cost no
+        prefill work, so the budget prices only the uncached suffix.
+        ``F_input`` still reads the FULL prompt — output length depends
+        on what the model sees, not on what was re-computed — so cache
+        hits change the work estimate, never the output estimate."""
         cfg = self.config
         t_base = cfg.base_estimates[category]
         bias = self.bias_store.get(category)
         safety = cfg.tenant_safety[tenant]
         f_in = self.f_input(prompt_tokens)
         est_out = t_base * bias * safety * f_in              # Eq. 2
-        t_budget = float(prompt_tokens) + est_out            # Eq. 1
+        cached = min(max(int(cached_tokens), 0), int(prompt_tokens))
+        t_budget = float(prompt_tokens - cached) + est_out   # Eq. 1
         return Estimate(
             t_base=t_base,
             bias=bias,
@@ -191,6 +199,7 @@ class AdaptiveTokenEstimator:
             est_output_tokens=est_out,
             t_budget=t_budget,
             job_class=self.classify_budget(t_budget),
+            cached_tokens=cached,
         )
 
     # -- Sec. II-J feedback ---------------------------------------------

@@ -70,8 +70,12 @@ class Estimate:
     safety: float            # S_tenant
     f_input: float           # prompt-complexity scaling
     est_output_tokens: float  # T_base * B * S * F        (Eq. 2)
-    t_budget: float           # T_input + est_output       (Eq. 1)
+    t_budget: float           # T_input - cached + est_out (Eq. 1, with
+    #                           the prefix-cache discount; 0 when the
+    #                           placement saw no resident overlap)
     job_class: JobClass       # runtime scheduling class   (Eq. 4)
+    cached_tokens: int = 0    # resident-prefix tokens priced out of
+    #                           T_input at estimation time
 
 
 @dataclass
@@ -81,6 +85,13 @@ class Request:
     prompt: str = ""
     prompt_tokens: int = 0           # T_input
     max_tokens: int = 1024           # user-configured generation cap
+    # --- shared-prefix identity (radix KV cache) ---
+    # The first ``shared_prefix_tokens`` of the prompt are a shared
+    # population prefix (tenant system prompt / RAG template) identified
+    # by ``prefix_group`` (any hashable; the generator uses
+    # (tenant_label, group_idx)). None/0 = no shareable prefix.
+    prefix_group: Optional[tuple] = None
+    shared_prefix_tokens: int = 0
     # Ground-truth output length. Hidden from the scheduler; consumed by
     # the simulator / engine which "generates" this many tokens (clipped
     # by max_tokens). The real JAX engine ignores it and samples to EOS.
@@ -110,6 +121,14 @@ class Request:
     prefill_rid: Optional[int] = None       # replica that ran prefill
     decode_rid: Optional[int] = None        # replica that ran decode
     n_steals: int = 0                # times moved by cross-replica stealing
+    # --- prefix-cache accounting (set by router / step engine) ---
+    # expected: the resident overlap the router observed on the chosen
+    # replica at placement (prices the admission budget); realized: the
+    # hit actually taken when prefill started (eviction/invalidation
+    # may land it below the expectation — drift analyses separate the
+    # two, see core.drift.DriftSample).
+    expected_cached_tokens: int = 0
+    cached_prompt_tokens: int = 0
 
     # monotone admission sequence number, assigned by the scheduler; used
     # for FIFO / tie-breaking so ordering is fully deterministic.
@@ -163,13 +182,34 @@ class Request:
 
     @property
     def decode_latency(self) -> Optional[float]:
-        """Decode-phase latency, seconds: KV arrival on the decode
-        replica to completion (decode queueing + decode execution).
-        None on the unified path, where the batch-atomic cost model
-        cannot split the two phases."""
-        if self.completion_time is None or self.handoff_time is None:
+        """Decode-phase latency, seconds. On the P/D path: KV arrival
+        on the decode replica to completion (decode queueing + decode
+        execution). On a unified replica running the step engine: first
+        token (``prefill_end``) to completion — pure decode execution.
+        None on the legacy atomic unified path, where the batch-atomic
+        cost model cannot split the two phases."""
+        if self.completion_time is None:
             return None
-        return self.completion_time - self.handoff_time
+        anchor = (self.handoff_time if self.handoff_time is not None
+                  else self.prefill_end)
+        if anchor is None:
+            return None
+        return self.completion_time - anchor
+
+    @property
+    def inter_token_latency(self) -> Optional[float]:
+        """Mean inter-token gap, seconds: the decode span divided over
+        the ``observed - 1`` gaps after the first token. Includes decode
+        queueing on the P/D path (the gap a client actually sees).
+        None until completion, on single-token outputs, and on the
+        legacy atomic unified path (no first-token anchor)."""
+        if self.observed_output_tokens is None \
+                or self.observed_output_tokens <= 1:
+            return None
+        span = self.decode_latency
+        if span is None:
+            return None
+        return span / (self.observed_output_tokens - 1)
 
     @property
     def kv_transfer_latency(self) -> Optional[float]:
@@ -191,6 +231,9 @@ class Request:
         self.exec_start = None
         self.exec_end = None
         self.worker_id = None
+        # any prefix-cache hit died with the worker's KV pool; the
+        # retry re-probes whatever cache its next replica holds
+        self.cached_prompt_tokens = 0
         self.state = RequestState.QUEUED
 
     def reset_for_reprefill(self) -> None:

@@ -1,7 +1,8 @@
 """Serving substrate: the execution layer DriftSched schedules onto.
 
 * :mod:`kv_cache`   — vLLM-style paged KV pool + host-side allocator
-  (the TPU adaptation of PagedAttention feeds from it);
+  (the TPU adaptation of PagedAttention feeds from it), plus the
+  page-granular shared-prefix radix cache (``PrefixTree``);
 * :mod:`cost_model` — service-time model: L4-calibrated for paper
   reproduction, roofline-derived for TPU projection;
 * :mod:`simulator`  — discrete-event simulation of the serving cluster
@@ -14,12 +15,14 @@
 
 from .cost_model import CostModel, L4_QWEN_1_8B
 from .engine import EngineConfig, ServingEngine
-from .kv_cache import PagedAllocator, PagedPool
+from .kv_cache import (PagedAllocator, PagedPool, PrefixTree,
+                       prefix_page_key)
 from .metrics import RunMetrics, percentile, summarize_run
 from .simulator import SimConfig, WorkerSimulator
 
 __all__ = [
     "CostModel", "EngineConfig", "L4_QWEN_1_8B",
-    "PagedAllocator", "PagedPool", "RunMetrics", "ServingEngine",
-    "SimConfig", "WorkerSimulator", "percentile", "summarize_run",
+    "PagedAllocator", "PagedPool", "PrefixTree", "RunMetrics",
+    "ServingEngine", "SimConfig", "WorkerSimulator", "percentile",
+    "prefix_page_key", "summarize_run",
 ]

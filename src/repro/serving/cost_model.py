@@ -55,14 +55,22 @@ class CostModel:
     jitter_sigma: float = 0.02   # lognormal execution noise
 
     def step_time(self, n_decoding: int, prefill_tokens: int = 0, *,
-                  include_base: bool = False, jitter: float = 1.0) -> float:
+                  cached_tokens: int = 0, include_base: bool = False,
+                  jitter: float = 1.0) -> float:
         """Price ONE continuous-batching iteration: ``n_decoding`` slots
         each emit one token, plus a chunked-prefill share of
         ``prefill_tokens`` prompt tokens processed alongside them
-        (Sarathi-style piggybacking). ``include_base`` adds the
-        per-dispatch launch overhead ``t_base`` — charged once per batch
-        formation, not per iteration (continuous batching amortises the
-        launch across the busy period). Returns 0 for an empty step."""
+        (Sarathi-style piggybacking). ``cached_tokens`` of those prompt
+        tokens are resident in the prefix KV cache and cost nothing —
+        only the uncached suffix is priced (the step engine already
+        passes net chunk sizes; the argument serves callers pricing a
+        request's remaining prefill against known cache state). Decode
+        cost is unaffected: attention still reads the cached pages.
+        ``include_base`` adds the per-dispatch launch overhead
+        ``t_base`` — charged once per batch formation, not per
+        iteration (continuous batching amortises the launch across the
+        busy period). Returns 0 for an empty step."""
+        prefill_tokens = max(prefill_tokens - cached_tokens, 0)
         if n_decoding <= 0 and prefill_tokens <= 0:
             return 0.0
         t = (self.c_decode_max
@@ -73,15 +81,19 @@ class CostModel:
         return t * jitter
 
     def batch_time(self, requests: Iterable[Request], *,
-                   jitter: float = 1.0) -> float:
+                   cached_tokens: int = 0, jitter: float = 1.0) -> float:
         """Atomic-batch price — the derived/legacy view of
         :meth:`step_time` (see module docstring for the telescoped
         identity): the batch prefills every prompt up front and decodes
-        until its longest member finishes."""
+        until its longest member finishes. ``cached_tokens`` discounts
+        prompt tokens resident in the prefix KV cache (summed over the
+        batch) — the atomic executor itself never populates a prefix
+        cache, so this serves estimation callers only."""
         reqs = list(requests)
         if not reqs:
             return 0.0
-        sum_prompt = sum(r.prompt_tokens for r in reqs)
+        sum_prompt = max(
+            sum(r.prompt_tokens for r in reqs) - cached_tokens, 0)
         outs = [min(r.true_output_tokens, r.max_tokens) for r in reqs]
         t = (self.t_base
              + self.c_prefill * sum_prompt
@@ -133,7 +145,9 @@ def prefill_view(cost: CostModel) -> CostModel:
     """Phase-scoped view for a P/D *prefill* replica: a batch there only
     pays launch overhead + prompt processing. Decode coefficients are
     zeroed, so batch time is independent of output lengths — which the
-    prefill stage never produces."""
+    prefill stage never produces. The ``cached_tokens`` discount of
+    ``step_time``/``batch_time`` applies unchanged: a prefill replica
+    with a resident shared prefix prices only the uncached suffix."""
     return replace(cost, name=cost.name + "+prefill",
                    c_decode_max=0.0, c_decode_sum=0.0)
 

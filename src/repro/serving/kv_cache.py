@@ -1,40 +1,58 @@
 """Paged KV-cache pool + host-side allocator (vLLM's PagedAttention,
-adapted to TPU).
+adapted to TPU) and the shared-prefix radix cache built on top of it
+(SGLang's RadixAttention, at page granularity).
 
 The GPU version's warp-level gather becomes page-granular DMA issued by
 the Pallas paged-attention kernel (kernels/paged_attention.py) via a
 scalar-prefetched page table. This module owns the other half of the
-design: the global page pool (one JAX array per K/V, page-major) and
-the host-side allocator (free list, per-sequence page tables, alloc on
-prefill / extend on decode / free on completion).
+design: the global page pool (one JAX array per K/V, page-major), the
+host-side allocator (free list, per-sequence page tables, alloc on
+prefill / extend on decode / free on completion), and the
+:class:`PrefixTree` — a radix tree of *full* KV pages keyed by prefix
+content, so sequences sharing a prompt prefix (tenant system prompts,
+RAG templates) reference the same physical pages instead of
+re-prefilling them.
 
 Fragmentation-free by construction: every allocation is page-granular,
 exactly the property the vLLM paper exploits to push batch sizes up.
+
+Everything except :class:`PagedPool` / :func:`write_prefill_pages` is
+pure host-side bookkeeping and importable without JAX — the
+discrete-event simulator reuses the identical allocator + prefix-tree
+state machine the engine runs, without pulling in the device stack.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..models.config import ModelConfig
+try:  # device half only; the allocator + prefix tree are JAX-free
+    import jax
+    import jax.numpy as jnp
+except Exception:  # pragma: no cover - exercised on JAX-less installs
+    jax = None
+    jnp = None
+
+if jax is not None:
+    from ..models.config import ModelConfig
 
 
 @dataclass
 class PagedPool:
     """Device-side page pool for one model: [L, n_pages, page, Hk, hd]."""
 
-    k: jax.Array
-    v: jax.Array
+    k: "jax.Array"
+    v: "jax.Array"
     page_size: int
 
     @classmethod
-    def create(cls, cfg: ModelConfig, n_pages: int, page_size: int = 128,
+    def create(cls, cfg: "ModelConfig", n_pages: int, page_size: int = 128,
                dtype=None) -> "PagedPool":
+        if jnp is None:  # pragma: no cover
+            raise ImportError("PagedPool.create requires JAX")
         dtype = dtype or jnp.dtype(cfg.dtype)
         shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.d_head)
         return cls(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
@@ -109,6 +127,21 @@ class PagedAllocator:
             self._free.append(p)
         del self._lens[seq_id]
 
+    # --- raw page ops (prefix-tree ownership) --------------------------
+    # The prefix tree owns pages directly rather than through a seq
+    # table: its pages belong to *content* (a shared prefix), not to any
+    # one sequence's lifetime.
+    def alloc_raw(self, n: int) -> List[int]:
+        """Take ``n`` pages off the free list with no seq accounting."""
+        if n > len(self._free):
+            raise OutOfPagesError(
+                f"need {n} raw pages, only {len(self._free)} free")
+        return [self._free.pop() for _ in range(n)]
+
+    def free_raw(self, pages: Sequence[int]) -> None:
+        """Return raw pages (from :meth:`alloc_raw`) to the free list."""
+        self._free.extend(pages)
+
     def seq_len(self, seq_id: int) -> int:
         return self._lens[seq_id]
 
@@ -143,7 +176,323 @@ class PagedAllocator:
         self._lens = {int(k): int(v) for k, v in state["lens"].items()}
 
 
-def write_prefill_pages(pool: PagedPool, layer_kv: Tuple[jax.Array, jax.Array],
+# ----------------------------------------------------------------------
+# Shared-prefix radix cache (SGLang RadixAttention, page-granular)
+# ----------------------------------------------------------------------
+
+def prefix_page_key(prefix_group: Optional[Hashable],
+                    shared_prefix_tokens: int,
+                    page_size: int) -> Tuple[Hashable, ...]:
+    """Page-granular cache key for a request's shared prompt prefix:
+    one hashable element per *full* page of the prefix. Only full pages
+    are shareable — a partially-filled page cannot be referenced by two
+    sequences that diverge inside it (that is the copy-on-write
+    boundary), so the partial remainder is always prefilled privately.
+    Returns () when the request carries no shareable prefix."""
+    if prefix_group is None or shared_prefix_tokens < page_size:
+        return ()
+    return tuple((prefix_group, i)
+                 for i in range(shared_prefix_tokens // page_size))
+
+
+class PrefixNode:
+    """One radix-tree node: a run of consecutive prefix pages.
+
+    ``key`` is the compressed key segment (one element per page) and
+    ``pages`` the physical page ids backing it (``len(pages) ==
+    len(key)``). ``refcount`` counts live sequences currently reading
+    these pages (locked via :meth:`PrefixTree.lock`); only unreferenced
+    *leaves* are evictable. ``last_access`` drives LRU eviction."""
+
+    __slots__ = ("key", "pages", "children", "parent", "refcount",
+                 "last_access")
+
+    def __init__(self, key: Tuple[Hashable, ...], pages: List[int],
+                 parent: Optional["PrefixNode"],
+                 last_access: float = 0.0) -> None:
+        self.key = key
+        self.pages = pages
+        self.children: Dict[Hashable, "PrefixNode"] = {}
+        self.parent = parent
+        self.refcount = 0
+        self.last_access = last_access
+
+    def is_leaf(self) -> bool:
+        return not self.children
+
+
+class PrefixTree:
+    """Radix tree of shared-prefix KV pages over a :class:`PagedAllocator`.
+
+    The RadixAttention design at page granularity: tree paths spell out
+    prefix *content* (one key element per full page), nodes own the
+    physical pages backing their segment, and a sequence whose prompt
+    starts with a cached prefix skips prefilling the matched pages
+    entirely. Contracts:
+
+    * **Refcounts pin pages.** :meth:`lock` increments every node from
+      the matched node to the root; :meth:`release` undoes it. A locked
+      node (or any ancestor of one — ancestors always carry >= their
+      descendants' locks) is never evicted, so a running sequence's
+      cached prefix cannot vanish under it.
+    * **LRU eviction under page pressure.** :meth:`insert` allocates
+      new pages via the shared allocator's raw free list; when the list
+      runs dry it evicts unreferenced leaves oldest-``last_access``
+      first (iteratively, so a fully-unreferenced chain unwinds). If
+      pressure persists the insert is truncated — caching is
+      best-effort, correctness never depends on a hit.
+    * **Copy-on-write past a shared page.** A sequence extending
+      *through* a cached page (decode continuing past the prefix, or a
+      prompt diverging inside a page) must not mutate pages other
+      sequences reference: :meth:`cow_extend` hands it a private copy
+      of the boundary page instead. Pure ownership transfer here — the
+      engine does the actual device-side page copy.
+    * **Checkpointable.** ``state_dict`` / ``load_state_dict`` round-
+      trip the tree structure and page ownership; refcounts are
+      deliberately *not* serialized (locks belong to live sequences,
+      which do not survive a restore).
+
+    Determinism: no randomness; LRU ties break on insertion order.
+    """
+
+    def __init__(self, allocator: PagedAllocator) -> None:
+        self.allocator = allocator
+        self.page_size = allocator.page_size
+        self.root = PrefixNode((), [], None)
+        self.n_evicted_pages = 0      # cumulative pages LRU-evicted
+        self.n_cow_pages = 0          # cumulative copy-on-write copies
+
+    # --- introspection -------------------------------------------------
+    def total_pages(self) -> int:
+        """Pages currently owned by the tree (resident cached prefix)."""
+        return sum(len(n.pages) for n in self._nodes())
+
+    def cached_tokens(self, key: Sequence[Hashable]) -> int:
+        """Resident-prefix overlap for ``key`` in tokens, without
+        touching LRU state (pure probe — what the cluster router calls
+        per routing decision)."""
+        _, n_pages = self._walk(key)
+        return n_pages * self.page_size
+
+    def _nodes(self) -> List[PrefixNode]:
+        out: List[PrefixNode] = []
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            if node is not self.root:
+                out.append(node)
+            stack.extend(node.children.values())
+        return out
+
+    # --- match / lock lifecycle ---------------------------------------
+    def _walk(self, key: Sequence[Hashable]
+              ) -> Tuple[PrefixNode, int]:
+        """Longest-prefix walk. Returns (deepest node whose pages are
+        used, total pages matched). A partial match inside a node's
+        segment counts its matched pages and stops there."""
+        node = self.root
+        i = 0
+        n = len(key)
+        while i < n:
+            child = node.children.get(key[i])
+            if child is None:
+                break
+            seg = child.key
+            j = 1
+            while j < len(seg) and i + j < n and seg[j] == key[i + j]:
+                j += 1
+            i += j
+            node = child
+            if j < len(seg):      # diverged / exhausted mid-segment
+                return node, i
+        return node, i
+
+    def match(self, key: Sequence[Hashable],
+              now: Optional[float] = None) -> Tuple[PrefixNode, int]:
+        """Longest cached prefix of ``key``: (node, n_pages_matched).
+        ``now`` (when given) refreshes LRU stamps along the path —
+        probes that must not perturb eviction order pass None (or use
+        :meth:`cached_tokens`)."""
+        node, n_pages = self._walk(key)
+        if now is not None:
+            self._touch(node, now)
+        return node, n_pages
+
+    def _touch(self, node: PrefixNode, now: float) -> None:
+        while node is not None and node is not self.root:
+            node.last_access = now
+            node = node.parent
+
+    def lock(self, node: PrefixNode) -> None:
+        """Pin ``node``'s pages (and its ancestors') against eviction
+        for the lifetime of one reading sequence."""
+        while node is not None and node.parent is not None:
+            node.refcount += 1
+            node = node.parent
+
+    def release(self, node: PrefixNode) -> None:
+        """Undo one :meth:`lock` (sequence finished or aborted).
+
+        Termination is parent-based, not identity-based, so releasing
+        a lock into a tree that was since :meth:`clear`-ed (the holder
+        survived a failure wipe) walks the orphaned chain and stops at
+        its old root instead of raising — a harmless no-op on dead
+        state."""
+        while node is not None and node.parent is not None:
+            if node.refcount <= 0:
+                raise ValueError("release without matching lock")
+            node.refcount -= 1
+            node = node.parent
+
+    # --- insert / evict ------------------------------------------------
+    def insert(self, key: Sequence[Hashable], now: float,
+               pages: Optional[List[int]] = None
+               ) -> Tuple[PrefixNode, int]:
+        """Make ``key`` resident: after a sequence prefills a shareable
+        prefix, its full pages enter the tree so future sequences hit.
+
+        ``pages`` (when given) donates the caller's freshly-written
+        physical pages for the *uncached tail* of the key — the engine
+        path, where page ids must match what was written on device.
+        Without it, pages are drawn from the allocator's free list (the
+        simulator path, where page identity is pure accounting),
+        evicting LRU leaves on pressure and truncating the insert if
+        pressure persists.
+
+        Returns (deepest resident node for this key, pages added).
+        """
+        node, n_matched = self._walk(key)
+        self._touch(node, now)
+        remaining = list(key[n_matched:])
+        if not remaining:
+            return node, 0
+        if node is not self.root and n_matched < self._depth_pages(node):
+            # partial match inside `node`'s segment: the new key
+            # diverges mid-node — split so the shared run is its own
+            # node and both continuations hang off it
+            node = self._split(node, n_matched - self._depth_pages(node.parent))
+        if pages is None:
+            # pin the attach point while claiming: under pressure the
+            # LRU sweep must not evict the (possibly unreferenced)
+            # matched path we are about to hang the new child off —
+            # that would orphan the child and leak its pages
+            self.lock(node)
+            try:
+                take = self._claim_pages(len(remaining))
+            finally:
+                self.release(node)
+        else:
+            if len(pages) != len(remaining):
+                raise ValueError(
+                    f"donated {len(pages)} pages for {len(remaining)} "
+                    "uncached key pages")
+            take = list(pages)
+        if not take:
+            return node, 0
+        child = PrefixNode(tuple(remaining[:len(take)]), take, node,
+                           last_access=now)
+        node.children[child.key[0]] = child
+        return child, len(take)
+
+    def _depth_pages(self, node: Optional[PrefixNode]) -> int:
+        d = 0
+        while node is not None and node is not self.root:
+            d += len(node.key)
+            node = node.parent
+        return d
+
+    def _split(self, node: PrefixNode, at: int) -> PrefixNode:
+        """Split ``node``'s segment after ``at`` pages; returns the new
+        upper node (which keeps the shared run)."""
+        upper = PrefixNode(node.key[:at], node.pages[:at], node.parent,
+                           last_access=node.last_access)
+        upper.refcount = node.refcount
+        node.parent.children[upper.key[0]] = upper
+        node.key = node.key[at:]
+        node.pages = node.pages[at:]
+        node.parent = upper
+        upper.children[node.key[0]] = node
+        return upper
+
+    def _claim_pages(self, n: int) -> List[int]:
+        """Up to ``n`` pages from the free list, evicting LRU
+        unreferenced leaves under pressure; may return fewer."""
+        short = n - self.allocator.free_pages
+        if short > 0:
+            self.evict(short)
+        take = min(n, self.allocator.free_pages)
+        return self.allocator.alloc_raw(take) if take > 0 else []
+
+    def evict(self, n_pages: int) -> int:
+        """Free up to ``n_pages`` cached pages, unreferenced leaves
+        first, oldest ``last_access`` first. Returns pages freed."""
+        freed = 0
+        while freed < n_pages:
+            leaves = [nd for nd in self._nodes()
+                      if nd.is_leaf() and nd.refcount == 0]
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda nd: nd.last_access)
+            self.allocator.free_raw(victim.pages)
+            freed += len(victim.pages)
+            self.n_evicted_pages += len(victim.pages)
+            del victim.parent.children[victim.key[0]]
+        return freed
+
+    def clear(self) -> int:
+        """Drop the whole cache (replica failure: the KV pool died with
+        the device). All pages return to the allocator regardless of
+        refcounts — the sequences holding locks died too. Returns pages
+        freed."""
+        freed = 0
+        for node in self._nodes():
+            self.allocator.free_raw(node.pages)
+            freed += len(node.pages)
+        self.root = PrefixNode((), [], None)
+        return freed
+
+    # --- copy-on-write boundary ---------------------------------------
+    def cow_extend(self, node: PrefixNode) -> int:
+        """A sequence must write into (extend past) ``node``'s last
+        page while others reference it: allocate a private copy and
+        hand ownership to the caller (who frees it with
+        ``allocator.free_raw`` when the sequence retires). Raises
+        :class:`OutOfPagesError` only when eviction cannot make room."""
+        pages = self._claim_pages(1)
+        if not pages:
+            raise OutOfPagesError("no page available for copy-on-write")
+        self.n_cow_pages += 1
+        return pages[0]
+
+    # --- checkpoint/restore -------------------------------------------
+    def state_dict(self) -> dict:
+        """Structure + page ownership + LRU stamps. Refcounts are not
+        saved: locks belong to live sequences, which don't survive a
+        restore (the engine re-locks on resume)."""
+        def pack(node: PrefixNode) -> dict:
+            return {"key": list(node.key), "pages": list(node.pages),
+                    "last_access": node.last_access,
+                    "children": [pack(c) for c in
+                                 sorted(node.children.values(),
+                                        key=lambda c: repr(c.key[0]))]}
+        return {"n_evicted_pages": self.n_evicted_pages,
+                "n_cow_pages": self.n_cow_pages,
+                "root": pack(self.root)}
+
+    def load_state_dict(self, state: dict) -> None:
+        def unpack(rec: dict, parent: Optional[PrefixNode]) -> PrefixNode:
+            node = PrefixNode(tuple(rec["key"]), list(rec["pages"]),
+                              parent, last_access=rec["last_access"])
+            for crec in rec["children"]:
+                child = unpack(crec, node)
+                node.children[child.key[0]] = child
+            return node
+        self.n_evicted_pages = int(state.get("n_evicted_pages", 0))
+        self.n_cow_pages = int(state.get("n_cow_pages", 0))
+        self.root = unpack(state["root"], None)
+
+
+def write_prefill_pages(pool: PagedPool, layer_kv: Tuple["jax.Array", "jax.Array"],
                         pages: List[int], n_tokens: int) -> PagedPool:
     """Scatter a prefilled [L, S, Hk, hd] K/V into the pool's pages."""
     k_new, v_new = layer_kv

@@ -3,7 +3,11 @@
 Computes everything the paper's tables report from a list of completed
 requests: latency percentiles (P50/P95/P99), queue waits, per-tenant
 and per-job-class breakdowns, GPU execution latency, throughput, and
-Jain's fairness index over tenant latencies.
+Jain's fairness index over tenant latencies — plus the step-engine
+streaming stats the paper could not observe at batch granularity:
+decode-phase latency and the per-request mean inter-token gap
+(``Request.inter_token_latency``), both empty on legacy atomic unified
+runs where no first-token anchor exists.
 """
 
 from __future__ import annotations
@@ -77,6 +81,11 @@ class RunMetrics:
     n_completed: int
     n_failed_dispatches: int
     makespan: float
+    # step-engine streaming stats (empty when no first-token anchor
+    # exists, i.e. legacy atomic unified runs): decode span per request
+    # and the mean inter-token gap over its `observed - 1` gaps
+    decode: LatencyStats = field(default_factory=LatencyStats)
+    inter_token: LatencyStats = field(default_factory=LatencyStats)
 
     def as_dict(self) -> dict:
         return {
@@ -93,6 +102,8 @@ class RunMetrics:
             "n_completed": self.n_completed,
             "n_failed_dispatches": self.n_failed_dispatches,
             "makespan": self.makespan,
+            "decode": self.decode.as_dict(),
+            "inter_token": self.inter_token.as_dict(),
         }
 
 
@@ -140,4 +151,6 @@ def summarize_run(policy: str, bias_enabled: bool,
         n_completed=len(reqs),
         n_failed_dispatches=n_failed_dispatches,
         makespan=makespan,
+        decode=LatencyStats.of([r.decode_latency for r in reqs]),
+        inter_token=LatencyStats.of([r.inter_token_latency for r in reqs]),
     )

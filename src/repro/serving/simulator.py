@@ -25,6 +25,19 @@ Two execution modes, selected by :attr:`SimConfig.step_engine`:
   already-completed members stay completed, unfinished slots re-queue
   with estimates preserved (at-most-once feedback).
 
+  With ``prefix_cache=True`` the worker group additionally models a
+  replica-wide **shared-prefix radix cache** (``kv_cache.PrefixTree``
+  over a ``PagedAllocator`` page budget): a joining request whose
+  prompt starts with a resident shared prefix skips prefilling the
+  cached full pages (chunked prefill starts at the cached boundary),
+  a finished prefill inserts its shareable full pages for future
+  requests, unreferenced LRU leaves evict under page pressure at
+  iteration boundaries, and worker failure invalidates the whole cache
+  (the KV pool died with the device — subsequent retries re-prefill in
+  full). Per-request cache credits live in :attr:`prefix_ledger`;
+  conservation becomes ``cached + chunk-prefilled == prompt`` and
+  ``emissions == observed``.
+
   **Parity mode** — ``chunk_prefill_tokens=None`` (unbounded) and
   ``continuous_joins=False`` — degenerates the step engine to the
   atomic contract: the whole batch prefills in its first iteration, no
@@ -71,6 +84,7 @@ from ..core.scheduler import DriftScheduler
 from ..distributed.fault_tolerance import HeartbeatMonitor, StragglerDetector
 from ..workload.generator import ArrivalPlan
 from .cost_model import CostModel, L4_QWEN_1_8B
+from .kv_cache import PagedAllocator, PrefixTree, prefix_page_key
 from .metrics import RunMetrics, summarize_run
 
 
@@ -97,6 +111,13 @@ class SimConfig:
     # disaggregation. Prefill-phase slots retire at prefill completion
     # (no decode); decode-phase work arrives with its KV handed off.
     phase: str = "unified"
+    # --- shared-prefix KV cache (radix tree; step engine only) ---
+    # model a replica-wide prefix cache: requests carrying a
+    # prefix_group skip prefilling resident full pages of their shared
+    # prompt prefix. prefix_cache_pages bounds residency (page size
+    # KV_PAGE_TOKENS); LRU leaves evict under pressure.
+    prefix_cache: bool = False
+    prefix_cache_pages: int = 4096
     # fault injection
     fail_times: Tuple[float, ...] = ()    # absolute failure times
     fail_worker: int = 0                  # which worker fails
@@ -138,6 +159,10 @@ class SlotProgress:
     prefill_remaining: int      # prompt tokens not yet prefilled here
     target: int                 # decode tokens to emit (0 on prefill phase)
     decode_done: int = 0        # tokens emitted so far
+    # --- prefix-cache state (SimConfig.prefix_cache) ---
+    cached_tokens: int = 0      # prompt tokens served from the cache
+    prefix_key: tuple = ()      # page key of the shareable prefix
+    prefix_node: object = None  # locked PrefixNode pinning cached pages
 
 
 @dataclass
@@ -173,8 +198,9 @@ GPU_MEM_DYNAMIC_GB = 1.2              # workspace swing at full occupancy
 
 
 def _pages_needed(n_tokens: int) -> int:
-    """Mirror of ``kv_cache.PagedAllocator.pages_needed`` (kept inline so
-    the simulator stays importable without JAX)."""
+    """Mirror of ``kv_cache.PagedAllocator.pages_needed`` at the
+    telemetry page size (kept as a module-level helper: telemetry page
+    math must not depend on whether a prefix cache was configured)."""
     return max(1, math.ceil(n_tokens / KV_PAGE_TOKENS))
 
 
@@ -225,6 +251,13 @@ class WorkerSimulator:
             raise ValueError(
                 "chunk_prefill_tokens requires step_engine=True: the "
                 "atomic-batch path prefills whole prompts by definition")
+        elif self.cfg.prefix_cache:
+            # same refusal logic: the atomic path prices whole batches
+            # and never consults per-slot prefill progress, so a cache
+            # there would be silently inert
+            raise ValueError(
+                "prefix_cache requires step_engine=True: only the "
+                "iteration-level engine prefills from a cached boundary")
         self.cost = cost_model or L4_QWEN_1_8B
         self.rng = rng or random.Random(self.cfg.seed)
         self._sink = sink
@@ -238,6 +271,20 @@ class WorkerSimulator:
         self.n_steps = 0                   # step-engine iterations run
         self.n_joins = 0                   # mid-flight slot joins
         self.phase_boundary: float = 0.0   # set when the stress burst fires
+        # --- shared-prefix radix cache (replica-wide KV reuse) ---
+        self.prefix_tree: Optional[PrefixTree] = None
+        if self.cfg.prefix_cache:
+            self.prefix_tree = PrefixTree(PagedAllocator(
+                n_pages=self.cfg.prefix_cache_pages,
+                page_size=KV_PAGE_TOKENS, pages_per_seq=1))
+        self.n_prefix_hits = 0             # slots that found resident pages
+        self.n_prefix_misses = 0           # shareable prefixes that found none
+        self.prefix_tokens_saved = 0       # prefill tokens never re-computed
+        self.n_cache_invalidations = 0     # failure-driven cache wipes
+        # req_id -> prompt tokens served from the cache (the third leg
+        # of token conservation: prefix_ledger + token_ledger[0] ==
+        # prompt_tokens for every completed request)
+        self.prefix_ledger: Dict[int, int] = {}
         # per-request token accounting (step engine): req_id ->
         # [prefill tokens processed, decode tokens emitted]. Reset on
         # abort (preempted iterations were never observed), so for every
@@ -360,6 +407,33 @@ class WorkerSimulator:
         return (not self._inflight and not self._batches
                 and self.sched.queue_depth() == 0)
 
+    def prefix_cached_tokens(self, req: Request) -> int:
+        """Resident-prefix overlap this worker group holds for ``req``,
+        in tokens (0 without a cache / a shareable prefix / for work
+        whose KV already arrived via handoff). Pure probe: does not
+        touch LRU or refcount state — the cluster router calls this for
+        every routable replica on every placement."""
+        if self.prefix_tree is None or req.handoff_time is not None:
+            return 0
+        key = prefix_page_key(req.prefix_group, req.shared_prefix_tokens,
+                              KV_PAGE_TOKENS)
+        if not key:
+            return 0
+        return min(self.prefix_tree.cached_tokens(key), req.prompt_tokens)
+
+    def prefix_cache_stats(self) -> Dict[str, int]:
+        """Cumulative cache counters (all zero when disabled)."""
+        return {
+            "hits": self.n_prefix_hits,
+            "misses": self.n_prefix_misses,
+            "tokens_saved": self.prefix_tokens_saved,
+            "evicted_pages": (self.prefix_tree.n_evicted_pages
+                              if self.prefix_tree else 0),
+            "resident_pages": (self.prefix_tree.total_pages()
+                               if self.prefix_tree else 0),
+            "invalidations": self.n_cache_invalidations,
+        }
+
     # ------------------------------------------------------------------
     def _eligible_workers(self, now: float) -> List[int]:
         out = []
@@ -480,17 +554,44 @@ class WorkerSimulator:
         return done
 
     # --- iteration-level execution (continuous batching) ----------------
-    def _make_slot(self, req: Request) -> SlotProgress:
+    def _make_slot(self, req: Request, now: float) -> SlotProgress:
         """Slot state for a joining request. Work already prefilled
         elsewhere (its KV arrived via a P/D handoff) skips prefill;
         prefill-phase slots decode nothing (target 0) and retire at
-        prefill completion."""
+        prefill completion. With a prefix cache, the resident full
+        pages of the request's shared prefix are served from cache:
+        prefill starts at the cached boundary and the matched tree
+        path is locked against eviction until the slot retires."""
         prefill = 0 if req.handoff_time is not None else req.prompt_tokens
-        target = (0 if self.cfg.phase == "prefill"
-                  else min(req.true_output_tokens, req.max_tokens))
+        slot = SlotProgress(
+            req=req, prefill_remaining=prefill,
+            target=(0 if self.cfg.phase == "prefill"
+                    else min(req.true_output_tokens, req.max_tokens)))
+        if self.prefix_tree is not None and prefill > 0:
+            slot.prefix_key = prefix_page_key(
+                req.prefix_group, req.shared_prefix_tokens,
+                KV_PAGE_TOKENS)
+            if slot.prefix_key:
+                node, n_pages = self.prefix_tree.match(slot.prefix_key,
+                                                       now)
+                cached = min(n_pages * KV_PAGE_TOKENS, prefill)
+                if cached > 0:
+                    self.prefix_tree.lock(node)
+                    slot.prefix_node = node
+                    slot.cached_tokens = cached
+                    slot.prefill_remaining = prefill - cached
+                    self.n_prefix_hits += 1
+                    self.prefix_tokens_saved += cached
+                else:
+                    self.n_prefix_misses += 1
+        if req.handoff_time is None:
+            # record the realized hit only where prefill actually runs:
+            # a decode-phase slot must not wipe the prefill replica's
+            # attribution before completion feeds the drift sample
+            req.cached_prompt_tokens = slot.cached_tokens
         self.token_ledger[req.req_id] = [0, 0]
-        return SlotProgress(req=req, prefill_remaining=prefill,
-                            target=target)
+        self.prefix_ledger[req.req_id] = slot.cached_tokens
+        return slot
 
     def _start_step_batch(self, wid: int, reqs: List[Request],
                           now: float) -> None:
@@ -498,7 +599,7 @@ class WorkerSimulator:
         w.idle = False
         w.exec_started = now
         w.batches += 1
-        batch = RunningBatch(slots=[self._make_slot(r) for r in reqs],
+        batch = RunningBatch(slots=[self._make_slot(r, now) for r in reqs],
                              gen=next(self._gen))
         self._batches[wid] = batch
         self._schedule_step(wid, now, include_base=True)
@@ -542,11 +643,36 @@ class WorkerSimulator:
         self.stragglers.observe(wid, dt)
         self._push(now + dt, "step_done", (wid, batch.gen))
 
+    def _release_prefix(self, slot: SlotProgress) -> None:
+        """Drop the slot's pin on its cached prefix pages (retirement
+        or takeover). After a failure-driven cache wipe the old node is
+        orphaned and releasing it is a harmless no-op on dead state."""
+        if slot.prefix_node is not None:
+            self.prefix_tree.release(slot.prefix_node)
+            slot.prefix_node = None
+
+    def _on_slot_prefilled(self, slot: SlotProgress, now: float) -> None:
+        """A slot's last prompt chunk just landed: its shareable full
+        pages become resident for future requests (RadixAttention
+        inserts at prefill completion). The pin moves from the matched
+        prefix to the deepest inserted node so the whole resident run
+        survives until this slot retires. Insertion may evict LRU
+        unreferenced leaves (this is the iteration-boundary eviction
+        point) and truncates under unrelievable pressure — caching is
+        best-effort."""
+        if self.prefix_tree is None or not slot.prefix_key:
+            return
+        node, _ = self.prefix_tree.insert(slot.prefix_key, now)
+        self._release_prefix(slot)
+        self.prefix_tree.lock(node)
+        slot.prefix_node = node
+
     def _complete_step_request(self, slot: SlotProgress, now: float) -> int:
         """Retire one finished slot: stamp timestamps and run the normal
         completion path unless the owner's hook intercepts (P/D prefill
         handoff). Returns 1 when a completion was produced."""
         req = slot.req
+        self._release_prefix(slot)
         if self._complete_hook is not None and self._complete_hook(req, now):
             return 0
         req.exec_end = now
@@ -570,6 +696,8 @@ class WorkerSimulator:
             if take:
                 slot.prefill_remaining -= take
                 ledger[0] += take
+                if slot.prefill_remaining <= 0:
+                    self._on_slot_prefilled(slot, now)
             if emits:
                 slot.decode_done += 1
                 ledger[1] += 1
@@ -596,7 +724,7 @@ class WorkerSimulator:
                     r.state = RequestState.EXECUTING
                     r.exec_start = now
                     r.worker_id = wid
-                    batch.slots.append(self._make_slot(r))
+                    batch.slots.append(self._make_slot(r, now))
                 if joined:
                     self.n_joins += len(joined)
                     self.sched.queues.record_depth(now)
@@ -630,6 +758,14 @@ class WorkerSimulator:
             # held for the atomic drain) re-queue from scratch
             reqs = [s.req for s in batch.slots] \
                 + [s.req for s in batch.finished]
+        if self.prefix_tree is not None:
+            # the KV pool died with the worker: every resident prefix —
+            # and every lock held by the aborted slots — is gone. A
+            # retry anywhere re-probes/re-prefills from scratch (lost
+            # KV → full re-prefill; the at-most-once feedback contract
+            # is untouched because aborted work never fed back).
+            self.prefix_tree.clear()
+            self.n_cache_invalidations += 1
         # abort: un-spend the remaining busy time, re-queue the requests
         if reqs:
             w.busy_time -= max(w.busy_until - now, 0.0)
@@ -641,6 +777,7 @@ class WorkerSimulator:
                     # that phase really did finish elsewhere)
                     r.prefill_end = None
                 self.token_ledger.pop(r.req_id, None)
+                self.prefix_ledger.pop(r.req_id, None)
                 self.sched.fail(r, now)
                 self.n_failed_dispatches += 1
         self._push(now + self.cfg.repair_time, "repair", wid)
@@ -653,14 +790,16 @@ class WorkerSimulator:
         granularity is per sequence, not over the aggregate token sum).
         Step engine: exact per-slot progress (prefilled + decoded —
         this is what makes memory telemetry respond to chunked
-        prefill). Atomic mode: the batch's full reservation (prompt +
-        planned output), the vLLM-style upper bound an atomic batch
-        allocates up front."""
+        prefill); cache-served prefix tokens are excluded here (their
+        pages are shared — the prefix tree reports them once, see
+        :meth:`_sample_telemetry`). Atomic mode: the batch's full
+        reservation (prompt + planned output), the vLLM-style upper
+        bound an atomic batch allocates up front."""
         pages = 0
         for batch in self._batches.values():
             for slot in itertools.chain(batch.slots, batch.finished):
-                tokens = (slot.req.prompt_tokens - slot.prefill_remaining
-                          + slot.decode_done)
+                tokens = (slot.req.prompt_tokens - slot.cached_tokens
+                          - slot.prefill_remaining + slot.decode_done)
                 if tokens > 0:
                     pages += _pages_needed(tokens)
         for reqs in self._inflight.values():
@@ -684,6 +823,10 @@ class WorkerSimulator:
         pool_pages = (len(self.workers) * self.cfg.batch_capacity
                       * _pages_needed(KV_MAX_CONTEXT_TOKENS))
         used_pages = self._slot_kv_pages() if busy_now else 0
+        if self.prefix_tree is not None:
+            # resident shared prefixes occupy pool pages whether or not
+            # any batch is running — that is the point of the cache
+            used_pages += self.prefix_tree.total_pages()
         occupancy = min(used_pages / max(pool_pages, 1), 1.0)
         mem = GPU_MEM_PLATEAU_GB + GPU_MEM_DYNAMIC_GB * occupancy
         self.telemetry.append(TelemetrySample(

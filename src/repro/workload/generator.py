@@ -59,6 +59,18 @@ class GeneratorConfig:
     # prompts of hundreds of tokens, modeled by scaling the counts while
     # keeping the corpus text/verbosity structure)
     prompt_tokens_scale: float = 1.0
+    # --- shared-prefix population (radix KV-cache workloads) ---
+    # Real multi-tenant chat/RAG traffic front-loads every prompt with
+    # a tenant system prompt / retrieval template. Model that: each
+    # request draws one of ``prefix_groups_per_tenant`` groups for its
+    # tenant tier and gains ``shared_prefix_tokens`` extra prompt
+    # tokens (NOT scaled by prompt_tokens_scale — system prompts are a
+    # fixed population, not per-request verbosity) tagged as shareable
+    # (Request.prefix_group / shared_prefix_tokens). 0 disables the
+    # mechanism and leaves the arrival plan bit-identical to earlier
+    # protocol versions (no extra rng draws).
+    shared_prefix_tokens: int = 0
+    prefix_groups_per_tenant: int = 4
     seed: int = 0
 
 
@@ -93,7 +105,9 @@ def cluster_stress_config(n_replicas: int, *,
                           per_replica_rate: float = 8.0,
                           seed: int = 0,
                           max_tokens: int = 1024,
-                          prompt_tokens_scale: float = 1.0
+                          prompt_tokens_scale: float = 1.0,
+                          shared_prefix_tokens: int = 0,
+                          prefix_groups_per_tenant: int = 4
                           ) -> GeneratorConfig:
     """Heterogeneous cluster stress traffic (multi-replica arrival plan).
 
@@ -116,6 +130,8 @@ def cluster_stress_config(n_replicas: int, *,
         stress_rate=per_replica_rate * n_replicas,
         max_tokens=max_tokens,
         prompt_tokens_scale=prompt_tokens_scale,
+        shared_prefix_tokens=shared_prefix_tokens,
+        prefix_groups_per_tenant=prefix_groups_per_tenant,
         seed=seed,
     )
 
@@ -141,14 +157,23 @@ class WorkloadGenerator:
         true_out = spec.sample_output(
             rng, noise_sigma=cfg.output_noise_sigma, max_tokens=cfg.max_tokens
         )
+        prefix_group = None
+        shared = 0
+        if cfg.shared_prefix_tokens > 0:
+            shared = cfg.shared_prefix_tokens
+            prefix_group = (tenant.label,
+                            rng.randrange(max(cfg.prefix_groups_per_tenant,
+                                              1)))
         return Request(
             tenant=tenant,
             category=category,
             prompt=spec.text,
             prompt_tokens=max(1, round(spec.prompt_tokens
-                                       * cfg.prompt_tokens_scale)),
+                                       * cfg.prompt_tokens_scale)) + shared,
             max_tokens=cfg.max_tokens,
             true_output_tokens=true_out,
+            prefix_group=prefix_group,
+            shared_prefix_tokens=shared,
         )
 
     def plan(self, seed: Optional[int] = None) -> ArrivalPlan:

@@ -1,0 +1,407 @@
+"""Shared-prefix KV reuse: radix tree semantics, cached-suffix pricing,
+step-engine integration, prefix-aware routing, failure invalidation,
+and the share-0 parity contract (prefix share 0 must be bit-identical
+to the cache-off step engine of PR 3)."""
+
+from dataclasses import replace
+
+import pytest
+
+from repro.cluster import (ClusterConfig, ClusterSimulator,
+                           PrefixAwareRouting, ROUTING_POLICIES)
+from repro.core.estimator import AdaptiveTokenEstimator, DriftConfig
+from repro.core.request import Category, Request, TenantTier
+from repro.core.scheduler import DriftScheduler
+from repro.serving.cost_model import L4_QWEN_1_8B
+from repro.serving.kv_cache import (OutOfPagesError, PagedAllocator,
+                                    PrefixTree, prefix_page_key)
+from repro.serving.simulator import (KV_PAGE_TOKENS, SimConfig,
+                                     WorkerSimulator)
+from repro.workload.generator import (GeneratorConfig, WorkloadGenerator,
+                                      cluster_stress_config)
+
+NOJIT = replace(L4_QWEN_1_8B, jitter_sigma=0.0)
+
+
+def _key(group, n_pages):
+    return tuple((group, i) for i in range(n_pages))
+
+
+# --- prefix_page_key ---------------------------------------------------
+
+def test_prefix_page_key_full_pages_only():
+    assert prefix_page_key(None, 4096, 128) == ()
+    assert prefix_page_key(("t", 0), 0, 128) == ()
+    assert prefix_page_key(("t", 0), 127, 128) == ()       # sub-page
+    assert prefix_page_key(("t", 0), 128, 128) == ((("t", 0), 0),)
+    # the partial tail page is never shareable (copy-on-write boundary)
+    assert len(prefix_page_key(("t", 0), 300, 128)) == 2
+
+
+# --- PrefixTree semantics ----------------------------------------------
+
+def test_tree_insert_match_and_shared_pages():
+    alloc = PagedAllocator(n_pages=32, page_size=128, pages_per_seq=8)
+    tree = PrefixTree(alloc)
+    node, added = tree.insert(_key("a", 4), 1.0)
+    assert added == 4 and tree.total_pages() == 4
+    # a second insert of the same key adds nothing (pages are shared)
+    _, added2 = tree.insert(_key("a", 4), 2.0)
+    assert added2 == 0 and tree.total_pages() == 4
+    assert tree.cached_tokens(_key("a", 4)) == 4 * 128
+    # partial key matches the shared run
+    assert tree.cached_tokens(_key("a", 2)) == 2 * 128
+    assert tree.cached_tokens(_key("b", 2)) == 0
+
+
+def test_tree_radix_split_on_divergence():
+    alloc = PagedAllocator(n_pages=32, page_size=128, pages_per_seq=8)
+    tree = PrefixTree(alloc)
+    tree.insert(_key("a", 4), 1.0)
+    diverged = _key("a", 2) + (("a", 99),)
+    _, added = tree.insert(diverged, 2.0)
+    assert added == 1
+    # both continuations stay resident, sharing the 2-page run
+    assert tree.cached_tokens(_key("a", 4)) == 4 * 128
+    assert tree.cached_tokens(diverged) == 3 * 128
+    assert tree.total_pages() == 5
+
+
+def test_tree_lock_blocks_eviction_lru_order():
+    alloc = PagedAllocator(n_pages=32, page_size=128, pages_per_seq=8)
+    tree = PrefixTree(alloc)
+    na, _ = tree.insert(_key("a", 2), 1.0)     # older
+    nb, _ = tree.insert(_key("b", 2), 2.0)     # newer
+    tree.lock(na)
+    freed = tree.evict(100)
+    # only the unreferenced leaf (b) may go, despite a being older
+    assert freed == 2
+    assert tree.cached_tokens(_key("a", 2)) == 2 * 128
+    assert tree.cached_tokens(_key("b", 2)) == 0
+    tree.release(na)
+    assert tree.evict(100) == 2
+    assert tree.total_pages() == 0
+    # LRU: with no locks, the oldest last_access goes first
+    tree.insert(_key("c", 2), 5.0)
+    tree.insert(_key("d", 2), 6.0)
+    tree.match(_key("c", 2), 7.0)              # refresh c
+    tree.evict(2)
+    assert tree.cached_tokens(_key("c", 2)) == 2 * 128
+    assert tree.cached_tokens(_key("d", 2)) == 0
+
+
+def test_tree_release_without_lock_raises():
+    alloc = PagedAllocator(n_pages=8, page_size=128, pages_per_seq=8)
+    tree = PrefixTree(alloc)
+    node, _ = tree.insert(_key("a", 1), 1.0)
+    with pytest.raises(ValueError):
+        tree.release(node)
+
+
+def test_tree_insert_truncates_under_locked_pressure():
+    """With every resident page locked and the free list empty, insert
+    cannot evict and must truncate instead of failing the caller."""
+    alloc = PagedAllocator(n_pages=4, page_size=128, pages_per_seq=4)
+    tree = PrefixTree(alloc)
+    node, added = tree.insert(_key("a", 3), 1.0)
+    assert added == 3
+    tree.lock(node)
+    node_b, added_b = tree.insert(_key("b", 3), 2.0)
+    assert added_b == 1                        # only one page left
+    assert alloc.free_pages == 0
+    # with EVERY resident page locked, cow_extend has nothing to claim
+    tree.lock(node_b)
+    with pytest.raises(OutOfPagesError):
+        tree.cow_extend(node)
+    tree.release(node)
+    tree.release(node_b)
+
+
+def test_tree_cow_extend_allocates_private_copy():
+    alloc = PagedAllocator(n_pages=8, page_size=128, pages_per_seq=4)
+    tree = PrefixTree(alloc)
+    node, _ = tree.insert(_key("a", 2), 1.0)
+    page = tree.cow_extend(node)
+    assert tree.n_cow_pages == 1
+    # caller owns the copy; the shared pages are untouched
+    assert tree.total_pages() == 2
+    assert alloc.free_pages == 8 - 3
+    alloc.free_raw([page])
+    assert alloc.free_pages == 8 - 2
+
+
+def test_tree_clear_returns_all_pages():
+    alloc = PagedAllocator(n_pages=16, page_size=128, pages_per_seq=4)
+    tree = PrefixTree(alloc)
+    na, _ = tree.insert(_key("a", 3), 1.0)
+    tree.insert(_key("b", 2), 2.0)
+    tree.lock(na)                              # locks die with the pool
+    assert tree.clear() == 5
+    assert tree.total_pages() == 0 and alloc.free_pages == 16
+    assert tree.cached_tokens(_key("a", 3)) == 0
+
+
+def test_tree_release_after_clear_is_noop():
+    """A lock holder that survives a failure wipe releases into the
+    orphaned old tree without raising (the locks died with the pool)."""
+    alloc = PagedAllocator(n_pages=8, page_size=128, pages_per_seq=4)
+    tree = PrefixTree(alloc)
+    node, _ = tree.insert(_key("a", 2), 1.0)
+    tree.lock(node)
+    tree.clear()
+    tree.release(node)                         # must not raise
+    assert tree.total_pages() == 0 and alloc.free_pages == 8
+
+
+def test_tree_insert_under_pressure_never_orphans_parent():
+    """Extending a resident unreferenced prefix under page pressure
+    must not LRU-evict the very node the extension hangs off — that
+    would leak the new pages out of both the tree and the free list."""
+    alloc = PagedAllocator(n_pages=3, page_size=128, pages_per_seq=4)
+    tree = PrefixTree(alloc)
+    tree.insert(_key("a", 2), 1.0)
+    tree.insert(_key("a", 4), 2.0)             # needs 2, only 1 free
+    assert alloc.free_pages + tree.total_pages() == 3
+    # whatever is resident is reachable
+    assert tree.cached_tokens(_key("a", 4)) == tree.total_pages() * 128
+
+
+def test_tree_state_dict_round_trip():
+    alloc = PagedAllocator(n_pages=32, page_size=128, pages_per_seq=8)
+    tree = PrefixTree(alloc)
+    tree.insert(_key("a", 4), 1.0)
+    tree.insert(_key("a", 2) + (("a", 9),), 2.0)
+    tree.insert(_key("b", 3), 3.0)
+    tree.evict(1)
+    sd = tree.state_dict()
+    other = PrefixTree(alloc)
+    other.load_state_dict(sd)
+    assert other.total_pages() == tree.total_pages()
+    assert other.n_evicted_pages == tree.n_evicted_pages
+    for key in (_key("a", 4), _key("a", 2) + (("a", 9),), _key("b", 3),
+                _key("c", 1)):
+        assert other.cached_tokens(key) == tree.cached_tokens(key)
+
+
+# --- cached-suffix pricing ---------------------------------------------
+
+def test_cost_model_prices_only_uncached_suffix():
+    c = NOJIT
+    full = c.step_time(4, 1000)
+    assert c.step_time(4, 1000, cached_tokens=600) == \
+        pytest.approx(c.step_time(4, 400))
+    assert c.step_time(4, 1000, cached_tokens=0) == full
+    # floor at zero: a cache can never make prefill negative
+    assert c.step_time(4, 1000, cached_tokens=5000) == \
+        pytest.approx(c.step_time(4, 0))
+    reqs = [Request(tenant=TenantTier.STANDARD, category=Category.SUMMARY,
+                    prompt_tokens=500, true_output_tokens=10)]
+    assert c.batch_time(reqs, cached_tokens=200) == \
+        pytest.approx(c.batch_time(reqs) - c.c_prefill * 200)
+
+
+def test_estimator_budget_discounts_cached_tokens():
+    est = AdaptiveTokenEstimator(DriftConfig())
+    base = est.estimate(Category.SUMMARY, TenantTier.STANDARD, 1000)
+    hit = est.estimate(Category.SUMMARY, TenantTier.STANDARD, 1000,
+                       cached_tokens=512)
+    # output estimate reads the FULL prompt; only T_input is discounted
+    assert hit.est_output_tokens == base.est_output_tokens
+    assert hit.t_budget == pytest.approx(base.t_budget - 512)
+    assert hit.cached_tokens == 512
+    # clamped to the prompt
+    over = est.estimate(Category.SUMMARY, TenantTier.STANDARD, 100,
+                        cached_tokens=512)
+    assert over.cached_tokens == 100
+
+
+# --- step-engine integration -------------------------------------------
+
+def _plan(shared, *, total=160, seed=11, groups=2):
+    gen = WorkloadGenerator(GeneratorConfig(
+        total_requests=total, calibration_requests=total // 3, seed=seed,
+        prompt_tokens_scale=8.0, shared_prefix_tokens=shared,
+        prefix_groups_per_tenant=groups))
+    return gen.plan(seed=seed)
+
+
+def _run_worker(shared, *, prefix_cache, pages=4096, **sim_kw):
+    sched = DriftScheduler(policy="fifo", config=DriftConfig())
+    sim = WorkerSimulator(
+        sched, _plan(shared),
+        SimConfig(seed=11, step_engine=True, prefix_cache=prefix_cache,
+                  prefix_cache_pages=pages, **sim_kw),
+        cost_model=NOJIT)
+    return sched, sim, sim.run()
+
+
+def test_prefix_cache_requires_step_engine():
+    with pytest.raises(ValueError, match="step_engine"):
+        WorkerSimulator(DriftScheduler(), config=SimConfig(
+            prefix_cache=True))
+
+
+def test_worker_cache_hits_and_token_conservation():
+    sched, sim, m = _run_worker(512, prefix_cache=True)
+    stats = sim.prefix_cache_stats()
+    assert stats["hits"] > 0
+    assert stats["tokens_saved"] >= stats["hits"] * KV_PAGE_TOKENS
+    assert m.n_completed == 160
+    for r in sched.completed:
+        prefilled, emitted = sim.token_ledger[r.req_id]
+        # conservation: cached + chunk-prefilled == prompt, and the
+        # realized hit recorded on the request matches the ledger
+        assert sim.prefix_ledger[r.req_id] + prefilled == r.prompt_tokens
+        assert sim.prefix_ledger[r.req_id] == r.cached_prompt_tokens
+        assert emitted == r.observed_output_tokens
+
+
+def test_worker_cache_reduces_latency_and_prefill_work():
+    _, on, m_on = _run_worker(512, prefix_cache=True)
+    _, off, m_off = _run_worker(512, prefix_cache=False)
+    assert on.prefix_tokens_saved > 0
+    prefilled_on = sum(v[0] for v in on.token_ledger.values())
+    prefilled_off = sum(v[0] for v in off.token_ledger.values())
+    assert prefilled_on + on.prefix_tokens_saved == prefilled_off
+    assert m_on.e2e.p50 < m_off.e2e.p50
+
+
+def test_share0_bit_parity_with_cache_off():
+    """Prefix share 0: the cache takes no action and the run is
+    bit-identical to the PR-3 step engine (same events, same floats)."""
+    sa, xa, ma = _run_worker(0, prefix_cache=True)
+    sb, xb, mb = _run_worker(0, prefix_cache=False)
+    assert ma.as_dict() == mb.as_dict()
+    ea = [lat for _, lat in sorted((r.req_id, r.e2e_latency)
+                                   for r in sa.completed)]
+    eb = [lat for _, lat in sorted((r.req_id, r.e2e_latency)
+                                   for r in sb.completed)]
+    assert ea == eb                            # exact, not approx
+    stats = xa.prefix_cache_stats()
+    assert stats["hits"] == stats["misses"] == stats["tokens_saved"] == 0
+
+
+def test_drift_samples_attribute_cache_outcome():
+    sched, sim, _ = _run_worker(512, prefix_cache=True)
+    samples = sched.drift.samples
+    assert any(s.cache_hit for s in samples)
+    assert any(not s.cache_hit for s in samples)
+    for s in samples:
+        if s.cache_hit:
+            assert s.cached_tokens >= KV_PAGE_TOKENS
+    split = sched.drift.per_cache_outcome()
+    assert split["hit"].n + split["miss"].n == len(samples)
+    # calibration is cache-neutral: hit samples carry the same
+    # output-drift information (non-degenerate errors), not zeros
+    assert split["hit"].n > 0 and split["hit"].mae > 0
+
+
+# --- routing -----------------------------------------------------------
+
+def test_prefix_aware_registered():
+    assert "prefix_aware" in ROUTING_POLICIES
+    assert ROUTING_POLICIES["prefix_aware"] is PrefixAwareRouting
+
+
+def _cluster(routing, shared, *, cache=True, pages=32, seed=3,
+             fail_events=(), total=300):
+    gen = WorkloadGenerator(cluster_stress_config(
+        4, seed=seed, total_requests=total, prompt_tokens_scale=8.0,
+        shared_prefix_tokens=shared, prefix_groups_per_tenant=4))
+    sim = ClusterSimulator(
+        plan=gen.plan(seed=seed),
+        config=ClusterConfig(n_replicas=4, routing=routing,
+                             step_engine=True, chunk_prefill_tokens=2048,
+                             prefix_cache=cache, prefix_cache_pages=pages,
+                             fail_events=fail_events, seed=seed),
+        cost_model=L4_QWEN_1_8B)
+    return sim, sim.run()
+
+
+def test_cluster_prefix_aware_beats_least_loaded_under_pressure():
+    """With the per-replica cache smaller than the group population,
+    residency-following placement must out-hit load-only placement and
+    cut the prefill tokens actually computed."""
+    _, pa = _cluster("prefix_aware", 1024)
+    _, ll = _cluster("least_loaded", 1024)
+    assert pa.prefix_cache["hit_rate"] > ll.prefix_cache["hit_rate"]
+    assert pa.prefix_cache["tokens_saved"] > ll.prefix_cache["tokens_saved"]
+    assert pa.prefix_cache["evicted_pages"] < ll.prefix_cache["evicted_pages"]
+    assert pa.run.n_completed == ll.run.n_completed == 300
+
+
+def test_cluster_share0_parity_and_counters_in_dict():
+    _, on = _cluster("least_loaded", 0, cache=True)
+    _, off = _cluster("least_loaded", 0, cache=False)
+    assert on.as_dict() == off.as_dict()
+    d = on.as_dict()
+    assert "prefix_cache" in d
+    for k in ("hits", "misses", "hit_rate", "tokens_saved",
+              "evicted_pages", "invalidations"):
+        assert k in d["prefix_cache"]
+    assert d["replicas"][0]["n_prefix_hits"] == 0
+
+
+def test_cluster_expected_cached_tokens_price_admission():
+    sim, m = _cluster("prefix_aware", 1024)
+    completed = [r for rep in sim.replicas for r in rep.sched.completed]
+    hits = [r for r in completed if r.estimate.cached_tokens > 0]
+    assert hits, "warm placements must price the uncached suffix"
+    for r in hits:
+        assert r.estimate.t_budget < r.prompt_tokens + \
+            r.estimate.est_output_tokens
+
+
+def test_worker_failure_with_surviving_workers_completes():
+    """Standalone group, 2 workers, one fails: the cache wipe must not
+    crash the surviving worker's slots when they release their (now
+    orphaned) prefix locks; everything still completes."""
+    sched = DriftScheduler(policy="fifo", config=DriftConfig())
+    sim = WorkerSimulator(
+        sched, _plan(512),
+        SimConfig(seed=11, step_engine=True, prefix_cache=True,
+                  n_workers=2, fail_times=(4.0,), fail_worker=0),
+        cost_model=NOJIT)
+    m = sim.run()
+    assert m.n_completed == 160
+    assert sim.n_cache_invalidations >= 1
+
+
+def test_reroute_reprices_cache_discount():
+    """A warm placement's cached-token budget discount belongs to the
+    dead replica; after a failure reroute every estimate must satisfy
+    t_budget == prompt - cached + est_out against its CURRENT cached
+    tokens (the surviving replica's residency, not the dead one's)."""
+    sim, m = _cluster("prefix_aware", 1024, fail_events=((4.0, 0),),
+                      total=240)
+    assert m.run.n_completed == 240 and m.n_rerouted > 0
+    for rep in sim.replicas:
+        for r in rep.sched.completed:
+            e = r.estimate
+            assert e.t_budget == pytest.approx(
+                r.prompt_tokens - e.cached_tokens + e.est_output_tokens)
+
+
+def test_cluster_failure_invalidates_cache_at_most_once_feedback():
+    """A replica failure wipes its resident prefixes (lost KV -> full
+    re-prefill); every request still completes exactly once and fires
+    feedback exactly once."""
+    sim, m = _cluster("prefix_aware", 1024, fail_events=((4.0, 0),),
+                      total=240)
+    assert m.run.n_completed == 240
+    inval = sum(rep.prefix_cache_stats()["invalidations"]
+                for rep in sim.replicas)
+    assert inval >= 1
+    feedback = sum(sim.estimator.bias_store.update_counts().values())
+    assert feedback == 240                     # at-most-once, exactly once
+
+
+def test_step_engine_reports_decode_and_inter_token_stats():
+    _, m = _cluster("least_loaded", 0, cache=False)
+    assert m.run.decode.n == m.run.n_completed
+    assert m.inter_token.n > 0
+    assert m.inter_token.p50 > 0
+    # inter-token gap can never exceed the whole decode span
+    assert m.inter_token.p50 <= m.decode.p50
+    d = m.run.as_dict()
+    assert "decode" in d and "inter_token" in d

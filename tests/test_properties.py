@@ -105,6 +105,55 @@ def test_paged_allocator_conservation(seqs):
     assert alloc.free_pages == 4096
 
 
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3),      # op: insert/acquire/release/evict
+                          st.integers(0, 5),      # prefix group
+                          st.integers(1, 16),     # key length (pages)
+                          st.integers(1, 20)),    # evict amount / pick
+                min_size=1, max_size=80))
+def test_prefix_tree_refcount_page_conservation(ops):
+    """Radix prefix cache under random insert/acquire/release/evict
+    sequences: pages are conserved against the allocator (free + tree ==
+    total; the tree holds no seq tables), locked paths never lose
+    resident pages, refcounts never underflow, and a fully-released
+    tree drains to empty under eviction. The pool (32 pages) is far
+    smaller than the worst-case population (6 groups x 16 pages), so
+    insert-under-pressure eviction/truncation is exercised, not just
+    explicit evict calls."""
+    from repro.serving.kv_cache import PagedAllocator, PrefixTree
+
+    N_PAGES = 32
+    alloc = PagedAllocator(n_pages=N_PAGES, page_size=8, pages_per_seq=8)
+    tree = PrefixTree(alloc)
+    held = []           # (locked node, key, pages matched at lock time)
+    key = lambda g, k: tuple((g, i) for i in range(k))
+    for t, (op, g, k, n) in enumerate(ops):
+        if op == 0:
+            tree.insert(key(g, k), float(t))
+        elif op == 1:
+            node, matched = tree.match(key(g, k), float(t))
+            if matched:
+                tree.lock(node)
+                held.append((node, key(g, k), matched))
+        elif op == 2 and held:
+            node, _, _ = held.pop(n % len(held))
+            tree.release(node)
+        elif op == 3:
+            tree.evict(n)
+        # conservation: every page is either free or owned by the tree
+        assert alloc.free_pages + tree.total_pages() == N_PAGES
+        # a locked path keeps its resident pages pinned
+        for _, hkey, matched in held:
+            assert tree.cached_tokens(hkey) // tree.page_size >= matched
+        for node in tree._nodes():
+            assert node.refcount >= 0
+    for node, _, _ in held:
+        tree.release(node)
+    tree.evict(N_PAGES)
+    assert tree.total_pages() == 0
+    assert alloc.free_pages == N_PAGES
+
+
 @given(st.lists(st.floats(min_value=-1e6, max_value=1e6,
                           allow_nan=False), min_size=1, max_size=300),
        st.floats(min_value=0, max_value=100))
