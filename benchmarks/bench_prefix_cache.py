@@ -42,7 +42,8 @@ import os
 
 from repro.cluster import ClusterConfig, ClusterSimulator
 from repro.serving.cost_model import L4_MAX_DRIVEN, L4_QWEN_1_8B
-from repro.workload.generator import WorkloadGenerator, cluster_stress_config
+from repro.workload.generator import (GeneratorConfig, WorkloadGenerator,
+                                      cluster_stress_config)
 
 from .common import fmt_table, mean, save_json
 
@@ -69,14 +70,91 @@ CHUNK_PREFILL_TOKENS = 2048
 _SMOKE = os.environ.get("BENCH_SMOKE", "").strip().lower() \
     not in ("", "0", "false", "no")
 
+# --- engine arm: the same question over real ServingEngine replicas ---
+# Engine-scale constants (smoke models bucket prompts at 64 tokens, so
+# the shared prefix and the page size shrink with them; the *shape* of
+# the experiment — cache budget below the group population, prefix_aware
+# vs least_loaded — is identical to the simulator sweep above).
+ENGINE_REPLICAS = 2
+ENGINE_REQUESTS = 120                 # 48 under BENCH_SMOKE
+ENGINE_SHARED_TOKENS = 16             # 2 pages of 8 on the device pool
+ENGINE_PAGE_SIZE = 8
+#: per-replica residency budget in device pages: 12 groups x 2 pages =
+#: 24 pages of population vs 16 budget — placement must partition.
+ENGINE_CACHE_PAGES = 16
+ENGINE_CHUNK_TOKENS = 16
+
 
 def _protocol() -> dict:
     """Effective sweep constants (shrunk under BENCH_SMOKE)."""
     if _SMOKE:
         return {"seeds": (1,), "total": 150, "n_replicas": 2,
-                "shares": (0, 1024)}
+                "shares": (0, 1024), "engine_total": 48}
     return {"seeds": SEEDS, "total": TOTAL_REQUESTS,
-            "n_replicas": N_REPLICAS, "shares": SHARED_PREFIX_TOKENS}
+            "n_replicas": N_REPLICAS, "shares": SHARED_PREFIX_TOKENS,
+            "engine_total": ENGINE_REQUESTS}
+
+
+def _run_engine_arm(proto: dict) -> dict:
+    """prefix_aware vs least_loaded over real JAX engines: N paged
+    ``ServingEngine`` replicas with the radix prefix cache and chunked
+    prefill on, driven through ``EngineClusterDriver``. Arrivals are
+    interleaved with engine steps (one step per arrival, then drain)
+    so routing probes a *live* cache — the measured-residency signal
+    ``prefix_aware`` follows. Hit rates aggregate each engine's own
+    tree counters; TTFT comes from the engine-stamped ``prefill_end``
+    in step units."""
+    import jax
+
+    from repro.cluster.driver import make_engine_cluster
+    from repro.configs import smoke_config
+    from repro.models.registry import get_api
+    from repro.serving.engine import EngineConfig
+    from repro.serving.metrics import percentile
+
+    cfg = smoke_config("smollm-135m")
+    params = get_api(cfg).init(cfg, jax.random.PRNGKey(0))
+    out = {}
+    for routing in ROUTINGS:
+        driver = make_engine_cluster(
+            cfg, params, ENGINE_REPLICAS, routing=routing,
+            engine_config=EngineConfig(
+                n_slots=4, max_len=96, prompt_buckets=(64,),
+                paged=True, page_size=ENGINE_PAGE_SIZE,
+                chunk_prefill_tokens=ENGINE_CHUNK_TOKENS,
+                prefix_cache=True,
+                prefix_cache_pages=ENGINE_CACHE_PAGES))
+        gen = WorkloadGenerator(GeneratorConfig(
+            total_requests=proto["engine_total"],
+            calibration_requests=proto["engine_total"],
+            max_tokens=24, seed=proto["seeds"][0],
+            shared_prefix_tokens=ENGINE_SHARED_TOKENS,
+            prefix_groups_per_tenant=PREFIX_GROUPS_PER_TENANT))
+        now = 0.0
+        for _, r in gen.plan(seed=proto["seeds"][0]).calibration:
+            r.arrival_time = now
+            driver.submit(r, now)
+            driver.step(now)
+            now += 1.0
+        m = driver.run_until_drained(max_steps=20_000)
+        stats = [rep.prefix_cache_stats() for rep in driver.replicas]
+        hits = sum(s["hits"] for s in stats)
+        misses = sum(s["misses"] for s in stats)
+        done = [r for rep in driver.replicas for r in rep.sched.completed]
+        out[routing] = {
+            "n_completed": m.n_completed,
+            "hit_rate": hits / max(hits + misses, 1),
+            "saved_tokens": sum(s["tokens_saved"] for s in stats),
+            "evicted_pages": sum(s["evicted_pages"] for s in stats),
+            "ttft_p50_steps": percentile(
+                [r.ttft for r in done if r.ttft is not None], 50),
+        }
+    pa, ll = out["prefix_aware"], out["least_loaded"]
+    out["prefix_aware_beats_least_loaded"] = {
+        "hit_rate": pa["hit_rate"] > ll["hit_rate"],
+        "ttft_p50": pa["ttft_p50_steps"] <= ll["ttft_p50_steps"],
+    }
+    return out
 
 
 def _run_one(routing: str, shared: int, cost_model, proto: dict,
@@ -123,7 +201,13 @@ def run() -> dict:
         "n_replicas": proto["n_replicas"],
         "shared_prefix_tokens": list(proto["shares"]),
         "prefix_groups_per_tenant": PREFIX_GROUPS_PER_TENANT,
-        "prefix_cache_pages": PREFIX_CACHE_PAGES},
+        "prefix_cache_pages": PREFIX_CACHE_PAGES,
+        "engine": {"n_replicas": ENGINE_REPLICAS,
+                   "total_requests": proto["engine_total"],
+                   "shared_prefix_tokens": ENGINE_SHARED_TOKENS,
+                   "page_size": ENGINE_PAGE_SIZE,
+                   "prefix_cache_pages": ENGINE_CACHE_PAGES,
+                   "chunk_prefill_tokens": ENGINE_CHUNK_TOKENS}},
         "sweep": {}}
     for regime, cost in REGIMES.items():
         rows = {}
@@ -144,6 +228,13 @@ def run() -> dict:
                            proto["seeds"][0], cache=False)
         out["share0_matches_baseline"][regime] = \
             with_cache.as_dict() == without.as_dict()
+
+    # engine arm: the same comparison over real JAX ServingEngine
+    # replicas (chunked prefill + page-donation radix cache on device)
+    try:
+        out["engine"] = _run_engine_arm(proto)
+    except ImportError as e:          # pragma: no cover - jax-less hosts
+        out["engine"] = {"skipped": str(e)}
 
     # headline: prefix_aware vs least_loaded at the highest share
     # (acceptance bar: less prefill-token work AND lower TTFT P50 at
@@ -196,4 +287,18 @@ def report(out: dict) -> str:
               f"{d['saved_tokens_ratio']:.2f}x, TTFT P50 "
               f"{d['ttft_p50_reduction_pct']:+.0f}%, e2e P50 "
               f"{d['e2e_p50_reduction_pct']:+.0f}%")
+    eng = out.get("engine", {})
+    if "skipped" in eng:
+        s += f"\nengine arm skipped: {eng['skipped']}"
+    else:
+        for routing in ROUTINGS:
+            r = eng[routing]
+            s += (f"\nengine[{routing}]: hit {r['hit_rate']:.2f}, "
+                  f"saved {r['saved_tokens']} tok, TTFT P50 "
+                  f"{r['ttft_p50_steps']:.0f} steps, "
+                  f"done {r['n_completed']}")
+        wins = eng["prefix_aware_beats_least_loaded"]
+        s += (f"\nengine: prefix_aware beats least_loaded: "
+              f"hit_rate={'YES' if wins['hit_rate'] else 'NO'}, "
+              f"ttft_p50={'YES' if wins['ttft_p50'] else 'NO'}")
     return s

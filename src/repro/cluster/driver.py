@@ -55,6 +55,16 @@ class EngineReplica(Replica):
         """True when nothing is queued or decoding on this engine."""
         return self.queue_depth() == 0 and not self.engine.active_slots()
 
+    def prefix_cached_tokens(self, req: Request) -> int:
+        """Resident shared-prefix overlap in this engine's radix KV
+        cache (``EngineConfig.prefix_cache``) — the *measured* warmth
+        signal ``prefix_aware`` routing scores over real engines. Pure
+        probe, like the simulator replica's."""
+        return self.engine.prefix_cached_tokens(req)
+
+    def prefix_cache_stats(self) -> dict:
+        return self.engine.prefix_cache_stats()
+
 
 class EngineClusterDriver:
     """Route + admit over N live engines, step them in lockstep."""
@@ -94,6 +104,11 @@ class EngineClusterDriver:
                 self.admission.shed_no_replica(req, est, now)
             self.n_shed += 1
             return False
+        # the chosen engine's resident-prefix overlap prices the
+        # admission estimate (estimate(cached_tokens=...) discounts
+        # T_input only; 0 without a prefix cache) — fed from an actual
+        # tree lookup, same contract as the cluster simulator
+        req.expected_cached_tokens = target.prefix_cached_tokens(req)
         target.sched.submit(req, now)
         return True
 

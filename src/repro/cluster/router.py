@@ -42,7 +42,7 @@ from __future__ import annotations
 import math
 import zlib
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..core.admission import count_tokens
 from ..core.estimator import AdaptiveTokenEstimator
@@ -345,11 +345,18 @@ class StealPlan:
     replica ``victim_rid`` for the idle replica ``thief_rid``. The owner
     (cluster simulator) executes the move; for decode-ready work it also
     pays a fresh KV-transfer delay, since the pages live on the
-    victim."""
+    victim.
+
+    ``req_ids`` pins exactly which queued requests move: the planner
+    filters the victim's queue tail for prefix-cache residency (work
+    that is cheap *because* it is queued where its prefix is resident
+    must not be dragged to a cold thief), so a bare count no longer
+    identifies the moved set."""
 
     victim_rid: int
     thief_rid: int
     n: int
+    req_ids: Tuple[int, ...] = ()
 
 
 class ClusterRouter:
@@ -442,6 +449,18 @@ class ClusterRouter:
         count as victims (stealing is precisely how their backlog drains
         faster) but never as thieves. Estimates travel with the stolen
         requests — stealing must not re-price work.
+
+        **Prefix-cache residency veto.** Not-yet-prefilled work in the
+        steal set consults measured residency
+        (:meth:`Replica.prefix_cached_tokens`): moving a request whose
+        shared prefix is resident on the victim but not on the thief
+        forfeits that many cached prefill tokens, so the move is
+        refused when the forfeited discount meets or exceeds the
+        request's own estimated budget — the queue-imbalance gain one
+        stolen request can relieve. Decode-ready work is exempt (its
+        KV re-transfers either way), as is everything when no replica
+        runs a prefix cache (zero residency everywhere: the plans are
+        exactly the pre-veto ones).
         """
         thieves = sorted((r for r in replicas
                           if r.routable() and r.is_idle()),
@@ -463,9 +482,22 @@ class ClusterRouter:
             n = victim.queue_depth() // 2
             if n <= 0:
                 continue
+            # the executor moves the queue *tail* (coldest end); veto
+            # tail members whose residency discount outweighs the gain
+            queued = victim.queued_requests()
+            movable = [
+                r for r in queued[len(queued) - n:]
+                if r.prefill_end is not None
+                or (victim.prefix_cached_tokens(r)
+                    - thief.prefix_cached_tokens(r)) < _budget(r)
+            ]
+            if not movable:
+                continue
             taken.add(victim.rid)
-            plans.append(StealPlan(victim_rid=victim.rid,
-                                   thief_rid=thief.rid, n=n))
+            plans.append(StealPlan(
+                victim_rid=victim.rid, thief_rid=thief.rid,
+                n=len(movable),
+                req_ids=tuple(r.req_id for r in movable)))
         return plans
 
     @staticmethod

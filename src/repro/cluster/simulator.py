@@ -107,6 +107,7 @@ class ClusterConfig:
     # failure invalidates the replica's whole cache (KV dies with it).
     prefix_cache: bool = False
     prefix_cache_pages: int = 4096
+    prefix_page_tokens: int = 128     # shareable-page granularity (tokens)
     control_interval: float = 1.0     # autoscaler / telemetry cadence
     max_time: float = 1e6             # hard stop against pathological stalls
     # replica-level fault injection: (absolute time, replica id)
@@ -337,6 +338,7 @@ class ClusterSimulator:
                 continuous_joins=self.cfg.continuous_joins,
                 prefix_cache=self.cfg.prefix_cache,
                 prefix_cache_pages=self.cfg.prefix_cache_pages,
+                prefix_page_tokens=self.cfg.prefix_page_tokens,
                 phase=phase,
                 repair_time=self.cfg.repair_time,
                 seed=self.cfg.seed),
@@ -514,8 +516,16 @@ class ClusterSimulator:
             victim = self.replicas[plan.victim_rid]
             thief = self.replicas[plan.thief_rid]
             queued = victim.sched.queues.drain()
-            keep, stolen = queued[:len(queued) - plan.n], \
-                queued[len(queued) - plan.n:]
+            if plan.req_ids:
+                # residency-vetoed plan: move exactly the pinned set
+                # (tail members whose cache discount did not outweigh
+                # the imbalance gain)
+                chosen = set(plan.req_ids)
+                keep = [r for r in queued if r.req_id not in chosen]
+                stolen = [r for r in queued if r.req_id in chosen]
+            else:
+                keep, stolen = queued[:len(queued) - plan.n], \
+                    queued[len(queued) - plan.n:]
             for req in keep:
                 victim.sched.queues.enqueue(req, req.enqueue_time)
             for req in stolen:

@@ -16,16 +16,52 @@ The engine drives the *identical* DriftScheduler state machine the
 simulator uses — admission, dispatch, completion feedback (Eq. 5-6) —
 so scheduling behaviour validated on the simulator transfers 1:1.
 
+Iteration-level execution (mirrors the simulator's step engine,
+``serving/simulator.py``; pinned by ``tests/test_engine_parity.py``):
+
+* **Chunked prefill** (``EngineConfig.chunk_prefill_tokens``): a
+  joining slot's prompt is consumed across iterations against a
+  per-step prefill token budget shared by prefilling slots in join
+  order (Sarathi-style). The slot's first token — and its honest TTFT
+  anchor ``Request.prefill_end`` — lands at the iteration its last
+  chunk completes; admissions keep interleaving with decode under
+  ``DriftScheduler.max_new_per_step``, and slot state only changes at
+  iteration boundaries. ``None`` (unbounded) is the legacy contract:
+  the whole bucket prefills in the admission step, which the parity
+  suite locks bit-for-bit against the pre-chunking engine.
+  Chunk accounting runs in *request* prompt tokens (clipped to the
+  bucket): the XLA padding a bucket adds is a static-shape artifact,
+  not billable workload. The device-side prefill for the uncached
+  remainder executes once, at the final chunk's iteration — the
+  smoke-scale projection of a fused chunked-prefill kernel.
+* **Shared-prefix reuse** (``EngineConfig.prefix_cache``, paged mode
+  only): ``kv_cache.PrefixTree`` runs over the engine's own page pool.
+  A joining request whose prompt starts with a resident shared prefix
+  (``Request.prefix_group`` / ``shared_prefix_tokens``) skips
+  prefilling the cached full pages — its page table references the
+  tree's refcount-pinned pages directly and chunked prefill starts at
+  the cached boundary. At prefill completion the freshly-written full
+  prefix pages are *donated* to the tree (``insert(pages=...)``: page
+  identity survives because the KV is already on device), and the pin
+  is released at retirement. ``prefix_cache_pages`` extra pool pages
+  back residency; unreferenced LRU leaves evict under pressure.
+  Shared-prefix prompts are tokenized with a deterministic per-group
+  prefix (content-hashed, positions 0..shared-1) so donated pages hold
+  exactly the KV any group member would compute.
+
 EOS: with randomly-initialised smoke models there is no semantic EOS,
 so requests stop at their ground-truth output length (oracle EOS,
 clipped by max_tokens) — exactly the signal the drift compensator must
-learn. A real deployment swaps in token-id EOS detection.
+learn. A real deployment swaps in token-id EOS detection. Note the
+cache interaction: a prefix served from cache re-observes no drift —
+feedback comes only from the decode the request actually ran.
 """
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+import math
+import zlib
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -37,6 +73,7 @@ from ..core.scheduler import DriftScheduler
 from ..models.config import ModelConfig
 from ..models.registry import get_api
 from ..models.steps import sample_logits
+from .kv_cache import PagedSeqLedger, prefix_page_key
 from .metrics import RunMetrics, summarize_run
 
 
@@ -51,6 +88,17 @@ class EngineConfig:
     # (transformer-family archs; kernels/paged_attention on TPU)
     paged: bool = False
     page_size: int = 16
+    # --- iteration-level prefill (Sarathi chunking) ---
+    # per-STEP prefill token budget shared by prefilling slots in join
+    # order; None = unbounded (whole-bucket prefill in the admission
+    # step — the legacy contract, locked by tests/test_engine_parity.py)
+    chunk_prefill_tokens: Optional[int] = None
+    # --- shared-prefix radix cache over the paged pool ---
+    # requires paged=True: sharing is physical (page-table aliasing)
+    prefix_cache: bool = False
+    # extra pool pages reserved for cache residency; also the LRU
+    # budget the tree is evicted back to after each donation
+    prefix_cache_pages: int = 64
 
 
 def _bucket(n: int, buckets: Tuple[int, ...]) -> int:
@@ -66,6 +114,13 @@ class SlotState:
     generated: int = 0
     target: int = 0
     last_token: int = 0
+    # --- chunked-prefill progress (request prompt tokens, bucket-clipped)
+    prompt_len: int = 0
+    prefill_remaining: int = 0     # uncached prompt tokens not yet consumed
+    cached_tokens: int = 0         # prompt tokens served from the cache
+    pending_prefill: bool = False  # device prefill not yet executed
+    batch: Optional[Dict] = None   # tokenized prompt awaiting prefill
+    bucket: int = 0
 
 
 class ServingEngine:
@@ -80,26 +135,48 @@ class ServingEngine:
         self.ecfg = config or EngineConfig()
         self.extras = extras or {}
         self.api = get_api(cfg)
+        c = self.ecfg.chunk_prefill_tokens
+        if c is not None and c < 1:
+            raise ValueError(
+                f"chunk_prefill_tokens must be >= 1 or None, got {c}")
+        if self.ecfg.prefix_cache and not self.ecfg.paged:
+            raise ValueError(
+                "prefix_cache requires paged=True: prefix sharing is "
+                "physical page-table aliasing over the paged pool")
         n, S = self.ecfg.n_slots, self.ecfg.max_len
         self.slots: List[SlotState] = [SlotState() for _ in range(n)]
         self.step_count = 0
         self.busy_steps = 0
         self._rng = jax.random.PRNGKey(0)
         self._prefill_cache = {}
+        self._join_order: List[int] = []   # slot ids, chunk-budget order
+        # --- prefix-cache counters (mirror WorkerSimulator's) ---
+        self.prefix_tree = None
+        self.n_prefix_hits = 0
+        self.n_prefix_misses = 0
+        self.prefix_tokens_saved = 0
 
         if self.ecfg.paged:
             if cfg.family not in ("dense", "moe", "vlm"):
                 raise ValueError(
                     f"paged engine supports transformer-family archs, "
                     f"not {cfg.family!r} (SSM state is O(1) already)")
-            from .kv_cache import PagedAllocator, PagedPool
+            from .kv_cache import PagedAllocator, PagedPool, PrefixTree
             pages_per_seq = -(-S // self.ecfg.page_size)
+            extra = (self.ecfg.prefix_cache_pages
+                     if self.ecfg.prefix_cache else 0)
             # pool has one extra page the allocator never hands out:
             # inactive slots scatter their (masked) writes into it
             self.alloc = PagedAllocator(
-                n_pages=n * pages_per_seq,
+                n_pages=n * pages_per_seq + extra,
                 page_size=self.ecfg.page_size,
                 pages_per_seq=pages_per_seq)
+            if self.ecfg.prefix_cache:
+                self.prefix_tree = PrefixTree(self.alloc)
+            self.ledger = PagedSeqLedger(
+                self.alloc, self.prefix_tree,
+                cache_pages_budget=(self.ecfg.prefix_cache_pages
+                                    if self.ecfg.prefix_cache else None))
             self.pool = PagedPool.create(cfg, self.alloc.n_pages + 1,
                                          self.ecfg.page_size)
             self._decode_paged = jax.jit(self._decode_paged_fn)
@@ -149,15 +226,90 @@ class ServingEngine:
                 jnp.take(one, 0, axis=axis).astype(full.dtype))
         self.cache = jax.tree_util.tree_map(ins, self.cache, cache_1)
 
+    # --- prefix-cache plumbing -------------------------------------------
+    def _shared_eff(self, req: Request, prompt_len: int) -> int:
+        """Shareable prefix tokens after bucket clipping."""
+        if req.prefix_group is None:
+            return 0
+        return min(req.shared_prefix_tokens, prompt_len)
+
+    def _prefix_key(self, req: Request, prompt_len: int) -> tuple:
+        return prefix_page_key(req.prefix_group,
+                               self._shared_eff(req, prompt_len),
+                               self.ecfg.page_size)
+
+    def prefix_cached_tokens(self, req: Request) -> int:
+        """Resident shared-prefix overlap this engine holds for
+        ``req``, in tokens. Pure probe (no LRU/refcount perturbation) —
+        the cluster router calls this per routable replica per
+        placement."""
+        if self.prefix_tree is None:
+            return 0
+        prompt_len = min(max(req.prompt_tokens, 1),
+                         _bucket(max(req.prompt_tokens, 1),
+                                 self.ecfg.prompt_buckets))
+        key = self._prefix_key(req, prompt_len)
+        if not key:
+            return 0
+        return min(self.prefix_tree.cached_tokens(key), prompt_len)
+
+    def prefix_cache_stats(self) -> Dict[str, int]:
+        """Cumulative cache counters (all zero when disabled)."""
+        return {
+            "hits": self.n_prefix_hits,
+            "misses": self.n_prefix_misses,
+            "tokens_saved": self.prefix_tokens_saved,
+            "evicted_pages": (self.prefix_tree.n_evicted_pages
+                              if self.prefix_tree else 0),
+            "resident_pages": (self.prefix_tree.total_pages()
+                               if self.prefix_tree else 0),
+            "invalidations": 0,
+        }
+
+    # --- tokenization -----------------------------------------------------
+    def _tokenize(self, req: Request, bucket: int, prompt_len: int,
+                  shared_eff: int) -> np.ndarray:
+        """[1, bucket] int32 prompt ids.
+
+        Legacy layout (no shareable prefix): prompt bytes right-aligned,
+        zero padding in front — bit-identical to the pre-chunking
+        engine. Prefix layout (``prefix_cache`` + a shareable prefix):
+        a deterministic content-hashed group prefix occupies positions
+        ``[0, shared_eff)`` — every member of a prefix group computes
+        identical KV there, which is what makes donated pages reusable
+        — and the request's own bytes fill the rest cyclically (no
+        trailing padding, so the last position stays a real token for
+        the prefill logits)."""
+        vocab = max(self.cfg.vocab - 1, 1)
+        tokens = np.zeros((1, bucket), np.int32)
+        if self.prefix_tree is not None and shared_eff > 0:
+            seed = zlib.crc32(repr(req.prefix_group).encode())
+            pos = np.arange(bucket, dtype=np.int64)
+            tokens[0] = (seed + pos * 2654435761) % vocab + 1
+            body = np.frombuffer(req.prompt.encode() or b"\x01",
+                                 dtype=np.uint8).astype(np.int64)
+            tail = bucket - shared_eff
+            if tail > 0:
+                reps = np.resize(body, tail)
+                tokens[0, shared_eff:] = reps % vocab + 1
+        else:
+            ids = np.frombuffer(req.prompt.encode()[:prompt_len * 4],
+                                dtype=np.uint8)[:prompt_len]
+            if len(ids):
+                tokens[0, -len(ids):] = ids % vocab + 1
+        return tokens
+
+    # --- admission --------------------------------------------------------
     def _admit(self, req: Request, slot: int, now: float) -> None:
+        """Open a slot for ``req``: tokenize, probe/pin the prefix
+        cache, allocate pages (paged mode) and queue the prompt for
+        chunked prefill. The device prefill itself runs at the
+        iteration the last chunk is consumed (:meth:`_run_prefill`)."""
         prompt_len = max(req.prompt_tokens, 1)
         bucket = _bucket(prompt_len, self.ecfg.prompt_buckets)
         prompt_len = min(prompt_len, bucket)      # truncate to the bucket
-        tokens = np.zeros((1, bucket), np.int32)
-        ids = np.frombuffer(req.prompt.encode()[:prompt_len * 4],
-                            dtype=np.uint8)[:prompt_len]
-        if len(ids):
-            tokens[0, -len(ids):] = ids % max(self.cfg.vocab - 1, 1) + 1
+        shared_eff = self._shared_eff(req, prompt_len)
+        tokens = self._tokenize(req, bucket, prompt_len, shared_eff)
         batch = {"tokens": jnp.asarray(tokens)}
         if self.cfg.family == "vlm":
             batch["patches"] = jnp.zeros(
@@ -165,29 +317,64 @@ class ServingEngine:
         if self.cfg.family == "encdec":
             batch["frames"] = jnp.zeros(
                 (1, self.cfg.enc_seq, self.cfg.d_model), jnp.bfloat16)
+        cached = 0
+        if self.ecfg.paged:
+            key = (self._prefix_key(req, prompt_len)
+                   if self.prefix_tree is not None else ())
+            cached = self.ledger.admit(slot, bucket, key, now)
+            cached = min(cached, shared_eff)
+            if key:
+                if cached > 0:
+                    self.n_prefix_hits += 1
+                    self.prefix_tokens_saved += cached
+                else:
+                    self.n_prefix_misses += 1
+        req.cached_prompt_tokens = cached
+        st = self.slots[slot]
+        st.req = req
+        st.generated = 0
+        st.target = max(1, min(req.true_output_tokens, req.max_tokens,
+                               self.ecfg.max_len - bucket - 2))
+        st.prompt_len = prompt_len
+        st.cached_tokens = cached
+        st.prefill_remaining = prompt_len - cached
+        st.pending_prefill = True
+        st.batch = batch
+        st.bucket = bucket
+        self._join_order.append(slot)
+        req.state = RequestState.EXECUTING
+        req.exec_start = now
+
+    def _run_prefill(self, slot: int, now: float) -> None:
+        """The slot's last prompt chunk landed: execute the device
+        prefill for the uncached remainder, donate shareable full pages
+        to the prefix tree, and emit the first token (the honest TTFT
+        anchor)."""
+        st = self.slots[slot]
         self._rng, sub = jax.random.split(self._rng)
         if self.ecfg.paged:
             from ..models import transformer
             from .kv_cache import write_prefill_pages
             logits, k_lv, v_lv = transformer.prefill_kv(
-                self.cfg, self.params, batch["tokens"],
-                patches=batch.get("patches"))
-            pages = self.alloc.alloc(slot, bucket)
+                self.cfg, self.params, st.batch["tokens"],
+                patches=st.batch.get("patches"))
+            cached = self.ledger.cached_tokens(slot)
+            pages = self.ledger.table(slot)[cached // self.ecfg.page_size:]
             self.pool = write_prefill_pages(
-                self.pool, (k_lv[:, 0], v_lv[:, 0]), pages, bucket)
+                self.pool, (k_lv[:, 0], v_lv[:, 0]), pages, st.bucket,
+                start_token=cached)
+            if self.prefix_tree is not None:
+                self.ledger.donate(slot, now)
             tok = sample_logits(logits, sub, self.ecfg.temperature)
         else:
-            tok, cache_1 = self._prefill_fn_for(bucket)(self.params,
-                                                        batch, sub)
+            tok, cache_1 = self._prefill_fn_for(st.bucket)(
+                self.params, st.batch, sub)
             self._insert_cache(slot, cache_1)
-        st = self.slots[slot]
-        st.req = req
         st.generated = 1                       # prefill emitted one token
-        st.target = max(1, min(req.true_output_tokens, req.max_tokens,
-                               self.ecfg.max_len - bucket - 2))
         st.last_token = int(tok[0])
-        req.state = RequestState.EXECUTING
-        req.exec_start = now
+        st.pending_prefill = False
+        st.batch = None
+        st.req.prefill_end = now               # first token exists now
 
     def _retire(self, slot: int, now: float) -> None:
         st = self.slots[slot]
@@ -195,26 +382,41 @@ class ServingEngine:
         req.exec_end = now
         self.sched.complete(req, st.generated, now)
         if self.ecfg.paged:
-            self.alloc.free(slot)
+            self.ledger.free(slot)
+        self._join_order.remove(slot)
         st.req = None
         st.generated = 0
         st.target = 0
+        st.prefill_remaining = 0
+        st.cached_tokens = 0
+        st.pending_prefill = False
 
     # --- main loop ----------------------------------------------------------
     def step(self, now: float) -> int:
-        """One engine iteration: admit into free slots, advance every
-        active slot one token, retire finished ones. Returns number of
-        completions this step. Per-iteration admission honours the
+        """One engine iteration: admit into free slots, consume the
+        per-step prefill chunk budget in join order (running the device
+        prefill for slots whose last chunk landed), advance every
+        decoding slot one token, retire finished ones. Returns number
+        of completions this step. Per-iteration admission honours the
         scheduler's ``max_new_per_step`` knob — the same slot-granular
         contract the discrete-event step engine uses
         (``DriftScheduler.dispatch_step``)."""
-        # admission
+        # admission (iteration boundary, interleaving with decode)
         joined = 0
         cap = self.sched.max_new_per_step
+        pages_per_seq = (self.alloc.pages_per_seq if self.ecfg.paged
+                         else 0)
         for slot in self.free_slots():
             if self.sched.queue_depth() == 0:
                 break
             if cap is not None and joined >= cap:
+                break
+            if self.ecfg.paged and self.prefix_tree is not None \
+                    and not self.ledger.can_admit(
+                        pages_per_seq * self.ecfg.page_size):
+                # conservative page guard: admission waits for
+                # retirements/evictions to free room (only reachable
+                # with a prefix cache — the plain pool is sized exactly)
                 break
             req = self.sched.dispatch(now)
             if req is None:
@@ -222,23 +424,46 @@ class ServingEngine:
             self._admit(req, slot, now)
             joined += 1
 
-        active = self.active_slots()
-        if not active:
+        # chunked prefill: apportion the per-step budget in join order;
+        # a slot's prefill-completing iteration also emits its first
+        # token (and, slot-ring legacy, joins this step's decode batch)
+        budget = (math.inf if self.ecfg.chunk_prefill_tokens is None
+                  else self.ecfg.chunk_prefill_tokens)
+        for slot in list(self._join_order):
+            st = self.slots[slot]
+            if not st.pending_prefill:
+                continue
+            take = int(min(st.prefill_remaining, budget))
+            st.prefill_remaining -= take
+            budget -= take
+            if st.prefill_remaining <= 0:
+                self._run_prefill(slot, now)
+            if budget <= 0:
+                break
+
+        decoding = [i for i in self.active_slots()
+                    if not self.slots[i].pending_prefill]
+        if not decoding:
+            if self.active_slots():
+                # prefill-only iteration (budget exhausted mid-prompt)
+                self.step_count += 1
+                self.busy_steps += 1
             return 0
 
         tokens = np.zeros((self.ecfg.n_slots,), np.int32)
-        for i in active:
+        for i in decoding:
             tokens[i] = self.slots[i].last_token
         self._rng, sub = jax.random.split(self._rng)
         if self.ecfg.paged:
-            sids = [i if self.slots[i].req is not None else None
+            sids = [i if (self.slots[i].req is not None
+                          and not self.slots[i].pending_prefill) else None
                     for i in range(self.ecfg.n_slots)]
-            pt = self.alloc.table_array(sids)
+            pt = self.ledger.table_array(sids, self.alloc.pages_per_seq)
             scratch = self.pool.n_pages - 1      # never allocated: inactive
             for i, sid in enumerate(sids):       # slots write there
                 if sid is None:
                     pt[i, :] = scratch
-            lens = self.alloc.lens_array(sids)
+            lens = self.ledger.lens_array(sids)
             toks, new_pool = self._decode_paged(
                 self.params, {"k": self.pool.k, "v": self.pool.v},
                 jnp.asarray(tokens), jnp.asarray(pt),
@@ -246,8 +471,19 @@ class ServingEngine:
             from .kv_cache import PagedPool
             self.pool = PagedPool(k=new_pool["k"], v=new_pool["v"],
                                   page_size=self.ecfg.page_size)
-            for i in active:
-                self.alloc.extend(i, 1)
+            for i in decoding:
+                _, cows = self.ledger.extend(i, 1)
+                for old, new in cows:
+                    # copy-on-write boundary: the ledger handed this
+                    # slot a private copy of a shared page — mirror it
+                    # device-side before the next write lands there.
+                    # Unreachable with full-page prefix keys (suffix
+                    # pages are always private) but wired for the
+                    # partial-page layouts cow_extend exists for.
+                    self.pool = PagedPool(
+                        k=self.pool.k.at[:, new].set(self.pool.k[:, old]),
+                        v=self.pool.v.at[:, new].set(self.pool.v[:, old]),
+                        page_size=self.ecfg.page_size)
         else:
             pos = np.asarray(self.cache["lens"])     # per-slot depth
             toks, self.cache = self._decode(
@@ -256,7 +492,7 @@ class ServingEngine:
         toks = np.asarray(toks)
 
         done = 0
-        for i in active:
+        for i in decoding:
             st = self.slots[i]
             st.generated += 1
             st.last_token = int(toks[i])

@@ -267,6 +267,19 @@ class PrefixTree:
         """Pages currently owned by the tree (resident cached prefix)."""
         return sum(len(n.pages) for n in self._nodes())
 
+    def path_pages(self, node: PrefixNode) -> List[int]:
+        """Position-ordered physical pages spelling the path from the
+        root to (and including) ``node`` — the page-table prefix a
+        sequence reading ``node``'s cached run references."""
+        segs: List[List[int]] = []
+        while node is not None and node is not self.root:
+            segs.append(node.pages)
+            node = node.parent
+        out: List[int] = []
+        for seg in reversed(segs):
+            out.extend(seg)
+        return out
+
     def cached_tokens(self, key: Sequence[Hashable]) -> int:
         """Resident-prefix overlap for ``key`` in tokens, without
         touching LRU state (pure probe — what the cluster router calls
@@ -492,16 +505,254 @@ class PrefixTree:
         self.root = unpack(state["root"], None)
 
 
+# ----------------------------------------------------------------------
+# Per-sequence page tables with shared-prefix reuse (engine host side)
+# ----------------------------------------------------------------------
+
+@dataclass
+class _SeqPages:
+    """One live sequence's page state inside a :class:`PagedSeqLedger`.
+
+    ``pages`` is the position-ordered physical page table (what the
+    kernel's scalar-prefetch operand is built from); ``owned`` the
+    subset this sequence must return to the free list when it retires —
+    the rest belong to the :class:`PrefixTree` and are pinned via
+    ``node``'s refcount instead."""
+
+    pages: List[int]
+    owned: List[int]
+    seq_len: int
+    key: Tuple[Hashable, ...] = ()
+    node: Optional[PrefixNode] = None
+    cached_pages: int = 0
+    donated: bool = False
+
+
+class PagedSeqLedger:
+    """Host-side per-sequence page bookkeeping for the engine's paged
+    path with shared-prefix reuse. Pure accounting, importable without
+    JAX — the engine does the device-side writes; the differential
+    parity suite and the hypothesis page-conservation property drive
+    this class directly.
+
+    Composition contract (mirrors the simulator's prefix integration):
+
+    * :meth:`admit` walks the tree for the sequence's prefix key, locks
+      the matched path (refcount pin), and allocates private pages only
+      for the *uncached* remainder — the page table interleaves
+      tree-owned prefix pages with privately-owned suffix pages in
+      position order.
+    * :meth:`donate` (at prefill completion) hands the freshly-written
+      full prefix pages to the tree via ``PrefixTree.insert(pages=...)``
+      — page *identity* must survive donation because the KV was
+      written on device — then re-pins the deepened path and enforces
+      the residency budget by LRU-evicting unreferenced leaves.
+    * :meth:`extend` grows the sequence one decode token at a time,
+      allocating on page-boundary crossings (evicting cache leaves
+      under pressure). If a write would land inside a page the
+      sequence does not own, the boundary page is copy-on-write
+      replaced via ``PrefixTree.cow_extend`` — unreachable with
+      full-page prefix keys (the suffix always starts page-aligned,
+      so decode never extends *into* a shared page) but kept as the
+      guard the tree API is designed around.
+    * :meth:`free` returns owned pages and releases the tree pin.
+
+    Conservation invariant (hypothesis-tested):
+    ``allocator.free_pages + owned_pages() + tree.total_pages()``
+    equals the pool size at every point.
+    """
+
+    def __init__(self, allocator: PagedAllocator,
+                 tree: Optional[PrefixTree] = None,
+                 cache_pages_budget: Optional[int] = None) -> None:
+        self.allocator = allocator
+        self.tree = tree
+        self.cache_pages_budget = cache_pages_budget
+        self.page_size = allocator.page_size
+        self._seqs: Dict[int, _SeqPages] = {}
+        self.n_cow_copies = 0        # device-copy events the engine owes
+
+    # --- introspection -------------------------------------------------
+    def seq_len(self, seq_id: int) -> int:
+        return self._seqs[seq_id].seq_len
+
+    def table(self, seq_id: int) -> List[int]:
+        return self._seqs[seq_id].pages
+
+    def cached_tokens(self, seq_id: int) -> int:
+        return self._seqs[seq_id].cached_pages * self.page_size
+
+    def owned_pages(self) -> int:
+        """Pages privately owned by live sequences (conservation leg)."""
+        return sum(len(rec.owned) for rec in self._seqs.values())
+
+    def probe(self, key: Sequence[Hashable]) -> int:
+        """Resident-prefix overlap for ``key`` in tokens; pure read."""
+        if self.tree is None or not key:
+            return 0
+        return self.tree.cached_tokens(key)
+
+    # --- allocation helpers --------------------------------------------
+    def _claim(self, n: int) -> List[int]:
+        """``n`` pages off the free list, evicting unreferenced cache
+        leaves under pressure; raises :class:`OutOfPagesError` when
+        eviction cannot make room (never returns fewer)."""
+        short = n - self.allocator.free_pages
+        if short > 0 and self.tree is not None:
+            self.tree.evict(short)
+        return self.allocator.alloc_raw(n)
+
+    def can_admit(self, n_tokens: int,
+                  key: Sequence[Hashable] = ()) -> bool:
+        """Whether a prefill of ``n_tokens`` can be admitted right now:
+        uncached pages needed vs free + evictable cache pages."""
+        cached = 0
+        if self.tree is not None and key:
+            cached = min(self.tree.cached_tokens(key), n_tokens)
+            cached -= cached % self.page_size
+        need = -(-(n_tokens - cached) // self.page_size)
+        avail = self.allocator.free_pages
+        if self.tree is not None:
+            avail += sum(len(nd.pages) for nd in self.tree._nodes()
+                         if nd.refcount == 0)
+        return need <= avail
+
+    # --- lifecycle -----------------------------------------------------
+    def admit(self, seq_id: int, n_tokens: int,
+              key: Sequence[Hashable] = (), now: float = 0.0) -> int:
+        """Open a sequence of ``n_tokens`` prompt tokens. Returns the
+        tokens served from the prefix cache (page-granular; the caller
+        starts its chunked prefill at that boundary)."""
+        if seq_id in self._seqs:
+            raise ValueError(f"seq {seq_id} already admitted")
+        # only full pages the prompt actually covers are shareable
+        key = tuple(key)[:n_tokens // self.page_size]
+        node: Optional[PrefixNode] = None
+        path: List[int] = []
+        cached_pages = 0
+        if self.tree is not None and key:
+            cand, matched = self.tree.match(key, now)
+            cached_pages = min(matched, n_tokens // self.page_size)
+            if cached_pages > 0:
+                node = cand
+                self.tree.lock(node)
+                path = self.tree.path_pages(node)[:cached_pages]
+        cached = cached_pages * self.page_size
+        need = -(-(n_tokens - cached) // self.page_size)
+        try:
+            fresh = self._claim(need) if need > 0 else []
+        except OutOfPagesError:
+            if node is not None:
+                self.tree.release(node)
+            raise
+        self._seqs[seq_id] = _SeqPages(
+            pages=path + fresh, owned=fresh, seq_len=n_tokens,
+            key=tuple(key), node=node, cached_pages=cached_pages)
+        return cached
+
+    def donate(self, seq_id: int, now: float) -> int:
+        """Prefill finished: make the sequence's shareable full pages
+        resident. Pages the tree does not already cover transfer
+        ownership (they stay in this sequence's table — the KV is
+        already written in them); the pin moves to the deepest resident
+        node so the whole referenced path survives until :meth:`free`.
+        Returns pages donated."""
+        rec = self._seqs[seq_id]
+        if self.tree is None or not rec.key or rec.donated:
+            return 0
+        rec.donated = True
+        _, matched_now = self.tree.match(rec.key, now)
+        # a concurrent donor may have made more of the key resident
+        # since admit; our lock guarantees it cannot have become less
+        donated = list(rec.pages[matched_now:len(rec.key)])
+        new_node, added = self.tree.insert(rec.key, now, pages=donated)
+        if added:
+            owned = set(donated)
+            rec.owned = [p for p in rec.owned if p not in owned]
+        if rec.node is not None:
+            self.tree.release(rec.node)
+        self.tree.lock(new_node)
+        rec.node = new_node
+        if self.cache_pages_budget is not None:
+            over = self.tree.total_pages() - self.cache_pages_budget
+            if over > 0:
+                self.tree.evict(over)
+        return added
+
+    def extend(self, seq_id: int, n_new: int = 1
+               ) -> Tuple[List[int], List[Tuple[int, int]]]:
+        """Grow a sequence by ``n_new`` decode tokens. Returns
+        (freshly-allocated pages, copy-on-write (old, new) page pairs
+        the caller must copy device-side)."""
+        rec = self._seqs[seq_id]
+        fresh: List[int] = []
+        cows: List[Tuple[int, int]] = []
+        P = self.page_size
+        for _ in range(n_new):
+            idx = rec.seq_len // P
+            if idx < len(rec.pages):
+                page = rec.pages[idx]
+                if page not in rec.owned and self.tree is not None:
+                    # writing into a shared page: private copy first
+                    new_page = self.tree.cow_extend(rec.node)
+                    rec.pages[idx] = new_page
+                    rec.owned.append(new_page)
+                    cows.append((page, new_page))
+                    self.n_cow_copies += 1
+            else:
+                page = self._claim(1)[0]
+                rec.pages.append(page)
+                rec.owned.append(page)
+                fresh.append(page)
+            rec.seq_len += 1
+        return fresh, cows
+
+    def free(self, seq_id: int) -> None:
+        """Retire a sequence: owned pages return to the free list, the
+        cached-path pin is released (a release into a tree that was
+        since cleared is a harmless no-op on dead state)."""
+        rec = self._seqs.pop(seq_id)
+        self.allocator.free_raw(rec.owned)
+        if rec.node is not None and self.tree is not None:
+            self.tree.release(rec.node)
+
+    # --- kernel operands ------------------------------------------------
+    def table_array(self, seq_ids: List[Optional[int]],
+                    width: int) -> np.ndarray:
+        """[B, width] int32 physical page ids (0-padded) — the paged
+        kernel's scalar-prefetch operand, shared pages included."""
+        out = np.zeros((len(seq_ids), width), np.int32)
+        for i, sid in enumerate(seq_ids):
+            if sid is None:
+                continue
+            pages = self._seqs[sid].pages
+            out[i, :len(pages)] = pages
+        return out
+
+    def lens_array(self, seq_ids: List[Optional[int]]) -> np.ndarray:
+        return np.array([0 if sid is None else self._seqs[sid].seq_len
+                         for sid in seq_ids], np.int32)
+
+
 def write_prefill_pages(pool: PagedPool, layer_kv: Tuple["jax.Array", "jax.Array"],
-                        pages: List[int], n_tokens: int) -> PagedPool:
-    """Scatter a prefilled [L, S, Hk, hd] K/V into the pool's pages."""
+                        pages: List[int], n_tokens: int, *,
+                        start_token: int = 0) -> PagedPool:
+    """Scatter a prefilled [L, S, Hk, hd] K/V into the pool's pages.
+
+    ``start_token`` skips the leading cache-resident positions: with a
+    shared-prefix hit the donor already wrote pages for tokens
+    ``[0, start_token)``, so ``pages`` covers positions from
+    ``start_token`` (page-aligned) onward only."""
+    if start_token % pool.page_size:
+        raise ValueError(
+            f"start_token {start_token} must be page-aligned "
+            f"({pool.page_size})")
     k_new, v_new = layer_kv
     P = pool.page_size
-    n_full = n_tokens // P
     k = pool.k
     v = pool.v
     for i, page in enumerate(pages):
-        lo = i * P
+        lo = start_token + i * P
         hi = min(lo + P, n_tokens)
         if lo >= n_tokens:
             break

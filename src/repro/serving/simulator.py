@@ -118,6 +118,12 @@ class SimConfig:
     # KV_PAGE_TOKENS); LRU leaves evict under pressure.
     prefix_cache: bool = False
     prefix_cache_pages: int = 4096
+    # token granularity of one prefix-cache page (the radix tree's
+    # shareable unit). Default matches the telemetry page model
+    # (KV_PAGE_TOKENS = 128); the engine↔simulator parity suite sets
+    # it to the engine's device page_size so cached-token accounting
+    # agrees across both executors.
+    prefix_page_tokens: int = 128
     # fault injection
     fail_times: Tuple[float, ...] = ()    # absolute failure times
     fail_worker: int = 0                  # which worker fails
@@ -276,7 +282,7 @@ class WorkerSimulator:
         if self.cfg.prefix_cache:
             self.prefix_tree = PrefixTree(PagedAllocator(
                 n_pages=self.cfg.prefix_cache_pages,
-                page_size=KV_PAGE_TOKENS, pages_per_seq=1))
+                page_size=self.cfg.prefix_page_tokens, pages_per_seq=1))
         self.n_prefix_hits = 0             # slots that found resident pages
         self.n_prefix_misses = 0           # shareable prefixes that found none
         self.prefix_tokens_saved = 0       # prefill tokens never re-computed
@@ -416,7 +422,7 @@ class WorkerSimulator:
         if self.prefix_tree is None or req.handoff_time is not None:
             return 0
         key = prefix_page_key(req.prefix_group, req.shared_prefix_tokens,
-                              KV_PAGE_TOKENS)
+                              self.cfg.prefix_page_tokens)
         if not key:
             return 0
         return min(self.prefix_tree.cached_tokens(key), req.prompt_tokens)
@@ -570,11 +576,12 @@ class WorkerSimulator:
         if self.prefix_tree is not None and prefill > 0:
             slot.prefix_key = prefix_page_key(
                 req.prefix_group, req.shared_prefix_tokens,
-                KV_PAGE_TOKENS)
+                self.cfg.prefix_page_tokens)
             if slot.prefix_key:
                 node, n_pages = self.prefix_tree.match(slot.prefix_key,
                                                        now)
-                cached = min(n_pages * KV_PAGE_TOKENS, prefill)
+                cached = min(n_pages * self.cfg.prefix_page_tokens,
+                             prefill)
                 if cached > 0:
                     self.prefix_tree.lock(node)
                     slot.prefix_node = node
@@ -823,10 +830,14 @@ class WorkerSimulator:
         pool_pages = (len(self.workers) * self.cfg.batch_capacity
                       * _pages_needed(KV_MAX_CONTEXT_TOKENS))
         used_pages = self._slot_kv_pages() if busy_now else 0
-        if self.prefix_tree is not None:
+        if self.prefix_tree is not None and self.prefix_tree.total_pages():
             # resident shared prefixes occupy pool pages whether or not
-            # any batch is running — that is the point of the cache
-            used_pages += self.prefix_tree.total_pages()
+            # any batch is running — that is the point of the cache.
+            # Tree pages are prefix_page_tokens-sized (configurable);
+            # convert to the fixed KV_PAGE_TOKENS telemetry granularity
+            # so occupancy units agree.
+            used_pages += _pages_needed(self.prefix_tree.total_pages()
+                                        * self.cfg.prefix_page_tokens)
         occupancy = min(used_pages / max(pool_pages, 1), 1.0)
         mem = GPU_MEM_PLATEAU_GB + GPU_MEM_DYNAMIC_GB * occupancy
         self.telemetry.append(TelemetrySample(

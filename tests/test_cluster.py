@@ -14,6 +14,7 @@ from repro.core.estimator import AdaptiveTokenEstimator, DriftConfig
 from repro.core.request import Category, Request, TenantTier
 from repro.core.scheduler import DriftScheduler
 from repro.serving.cost_model import L4_MAX_DRIVEN
+from repro.serving.kv_cache import prefix_page_key
 from repro.serving.simulator import SimConfig, WorkerSimulator
 from repro.workload.generator import WorkloadGenerator, cluster_stress_config
 
@@ -390,6 +391,61 @@ def test_steals_respect_roles():
         reps[0].sched.submit(_req(), now=0.0)
     plans = router.plan_steals(reps, now=0.0, min_victim_depth=4)
     assert [p.thief_rid for p in plans] == [2]
+
+
+def test_steals_refuse_to_move_resident_prefix_work():
+    """Prefix-cache-aware stealing: not-yet-prefilled work whose shared
+    prefix is resident on the victim — and whose admission estimate was
+    priced with that discount — is NOT dragged to a cold thief when the
+    forfeited cache discount exceeds the queue-imbalance gain (the
+    request's own budget mass). Cold work on the same victim still
+    steals exactly as before."""
+    est = AdaptiveTokenEstimator(DriftConfig())
+    reps = []
+    for i in range(2):
+        sched = DriftScheduler(estimator=est)
+        sim = WorkerSimulator(
+            sched,
+            config=SimConfig(step_engine=True, prefix_cache=True,
+                             prefix_cache_pages=64),
+            sink=lambda *a: None)
+        reps.append(SimReplica(i, sched, sim))
+    victim, thief = reps
+    # a 4096-token tenant prefix resident on the victim only
+    group = ("standard", 0)
+    key = prefix_page_key(group, 4096, 128)
+    victim.sim.prefix_tree.insert(key, 0.0)
+    router = ClusterRouter("prefix_aware", est)
+
+    def warm_req():
+        r = _req()
+        r.prompt_tokens = 4200
+        r.prefix_group = group
+        r.shared_prefix_tokens = 4096
+        # priced at placement on the warm replica (the cluster stamps
+        # the chosen replica's overlap): the queued budget is only the
+        # uncached remainder — which the discount dwarfs
+        r.expected_cached_tokens = 4096
+        return r
+
+    for _ in range(8):
+        victim.sched.submit(warm_req(), now=0.0)
+    assert victim.prefix_cached_tokens(victim.queued_requests()[0]) == 4096
+    assert thief.prefix_cached_tokens(victim.queued_requests()[0]) == 0
+    # every steal-tail candidate is residency-vetoed: no plan at all
+    assert router.plan_steals(reps, now=0.0, min_victim_depth=4) == []
+
+    # control: pile cold (no shareable prefix) work behind the warm
+    # stream — the tail is now cold and steals normally, the warm head
+    # stays pinned to its resident replica
+    cold = [_req() for _ in range(8)]
+    for r in cold:
+        victim.sched.submit(r, now=0.0)
+    plans = router.plan_steals(reps, now=0.0, min_victim_depth=4)
+    assert len(plans) == 1
+    assert plans[0].victim_rid == 0 and plans[0].thief_rid == 1
+    assert set(plans[0].req_ids) == {r.req_id for r in cold}
+    assert plans[0].n == len(plans[0].req_ids) == 8
 
 
 def test_stealing_preserves_estimates_and_order_metadata():

@@ -154,6 +154,82 @@ def test_prefix_tree_refcount_page_conservation(ops):
     assert alloc.free_pages == N_PAGES
 
 
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 4),      # op: admit/chunk/extend/donate/retire
+                          st.integers(0, 4),      # prefix group
+                          st.integers(1, 12),     # prompt tokens / pick
+                          st.integers(0, 10)),    # decode tokens / extend amount
+                min_size=1, max_size=80))
+def test_engine_page_ledger_conservation(ops):
+    """The engine's paged bookkeeping (PagedSeqLedger over one
+    allocator + PrefixTree) under random admit / chunk-consume /
+    decode-extend / donate / retire sequences, mirroring the PR-4
+    simulator-side property: every page is free, privately owned by a
+    live sequence, or resident in the tree (free + owned + cached ==
+    pool at every point); donation never double-owns a page; and after
+    retiring everything and a failure wipe (``clear``) no refcount
+    strands a page — the pool drains to fully free.
+
+    The pool (24 pages) sits far below the worst-case population
+    (5 groups x 3-page keys + per-seq privates), so insert-under-
+    pressure eviction and the OutOfPages admission path are exercised,
+    not just the happy path."""
+    from repro.serving.kv_cache import (OutOfPagesError, PagedAllocator,
+                                        PagedSeqLedger, PrefixTree)
+
+    N_PAGES = 24
+    P = 4
+    alloc = PagedAllocator(n_pages=N_PAGES, page_size=P, pages_per_seq=8)
+    tree = PrefixTree(alloc)
+    ledger = PagedSeqLedger(alloc, tree, cache_pages_budget=10)
+    key = lambda g, pages: tuple((g, i) for i in range(pages))
+    live = {}            # seq_id -> remaining chunk tokens (scheduling toy)
+    next_seq = 0
+    for t, (op, g, k, n) in enumerate(ops):
+        if op == 0:       # admit: prompt of k*P tokens, key up to 3 pages
+            try:
+                cached = ledger.admit(next_seq, k * P,
+                                      key(g, min(k, 3)), float(t))
+            except OutOfPagesError:
+                pass      # pool genuinely full of pinned pages: refused
+            else:
+                assert cached % P == 0
+                assert cached <= k * P
+                live[next_seq] = k * P - cached
+                next_seq += 1
+        elif op == 1 and live:        # consume a prefill chunk
+            sid = sorted(live)[n % len(live)]
+            live[sid] = max(live[sid] - k, 0)
+        elif op == 2 and live:        # decode growth
+            sid = sorted(live)[k % len(live)]
+            try:
+                fresh, cows = ledger.extend(sid, n)
+            except OutOfPagesError:
+                pass
+            else:
+                assert not cows       # full-page keys: suffix is private
+        elif op == 3 and live:        # prefill completion -> donation
+            sid = sorted(live)[k % len(live)]
+            if live[sid] == 0:
+                ledger.donate(sid, float(t))
+        elif op == 4 and live:        # retirement
+            sid = sorted(live)[k % len(live)]
+            ledger.free(sid)
+            del live[sid]
+        # conservation: every page accounted exactly once
+        assert alloc.free_pages + ledger.owned_pages() \
+            + tree.total_pages() == N_PAGES
+        for node in tree._nodes():
+            assert node.refcount >= 0
+    for sid in list(live):
+        ledger.free(sid)
+    assert ledger.owned_pages() == 0
+    # live pins are gone: the wipe must strand nothing
+    assert all(nd.refcount == 0 for nd in tree._nodes())
+    tree.clear()
+    assert alloc.free_pages == N_PAGES
+
+
 @given(st.lists(st.floats(min_value=-1e6, max_value=1e6,
                           allow_nan=False), min_size=1, max_size=300),
        st.floats(min_value=0, max_value=100))
