@@ -68,10 +68,23 @@ def sanitize_json(obj):
     """Replace non-finite floats (NaN/inf) with None so the output is
     *strict* JSON — Python's json module would otherwise emit bare
     ``NaN`` literals (e.g. empty LatencyStats percentiles), which jq,
-    JavaScript, and most non-Python consumers reject wholesale."""
+    JavaScript, and most non-Python consumers reject wholesale.
+
+    Dataclasses and numpy/JAX scalars are unpacked *before* the float
+    check: previously they fell through to ``json.dump(default=str)``,
+    which silently stringified their NaNs into ``"nan"`` — a value that
+    parses as a string and poisons any numeric consumer downstream."""
+    import dataclasses
     import math
     if isinstance(obj, float):
         return obj if math.isfinite(obj) else None
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        as_dict = getattr(obj, "as_dict", None)
+        return sanitize_json(as_dict() if callable(as_dict)
+                             else dataclasses.asdict(obj))
+    if type(obj).__module__.split(".")[0] in ("numpy", "jax", "jaxlib"):
+        if hasattr(obj, "tolist"):      # ndarray/scalar -> python types
+            return sanitize_json(obj.tolist())
     if isinstance(obj, dict):
         return {k: sanitize_json(v) for k, v in obj.items()}
     if isinstance(obj, (list, tuple)):

@@ -3,7 +3,7 @@ plus the beyond-paper fault-tolerance, cluster-routing, and
 P/D-disaggregation suites and the roofline summary.
 
     PYTHONPATH=src python -m benchmarks.run [--list] [--only NAME]
-                                            [--json PATH]
+                                            [--json PATH] [--trace PATH]
 
 ``--list`` prints the available benchmark keys together with each
 module's config constants and exits. ``--only`` substring-filters the
@@ -12,6 +12,16 @@ PATH`` additionally writes every executed benchmark's raw result dict
 (plus wall time, failure status, the benchmark's config constants, and
 the repo git SHA) to one machine-readable JSON file (``-`` for stdout),
 so per-PR perf trajectories stay attributable across PRs.
+
+``--trace PATH`` installs the process-global trace recorder
+(``repro.obs``) before any benchmark builds a simulator or engine, so
+every arm executed by this invocation emits lifecycle events; on exit
+the recording is exported as a Chrome-trace-event (Perfetto-loadable)
+file at PATH. Summarize it with ``python -m repro.obs.report PATH``.
+Tracing is counter-sampled and RNG-free: traced results are
+bit-identical to untraced ones (locked by ``tests/test_obs.py``).
+With ``--json`` the trace path, sampling strides, event counts, and
+the streaming telemetry/SLO snapshots land in ``_meta.trace``.
 """
 
 from __future__ import annotations
@@ -101,6 +111,10 @@ def main(argv=None) -> int:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write all executed benchmark results to PATH "
                          "as machine-readable JSON ('-' for stdout)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record lifecycle traces for every executed "
+                         "benchmark and export a Chrome-trace-event "
+                         "(Perfetto) file to PATH")
     args = ap.parse_args(argv)
 
     if args.list:
@@ -122,6 +136,20 @@ def main(argv=None) -> int:
     results = {"_meta": {"git_sha": git_sha(),
                          "argv": list(argv) if argv is not None
                          else sys.argv[1:]}}
+
+    recorder = series = slo = None
+    if args.trace:
+        # install the process-global recorder BEFORE any benchmark
+        # constructs a simulator/engine (components resolve it at
+        # construction time); observers stream every emission
+        # pre-sampling, so their aggregates are exact
+        from repro.obs import (SeriesBank, SloMonitor, TraceRecorder,
+                               set_recorder)
+        series = SeriesBank()
+        slo = SloMonitor()
+        recorder = TraceRecorder(observers=(series, slo))
+        set_recorder(recorder)
+
     for name, mod in selected:
         t0 = time.time()
         print(f"\n=== {name} ===", flush=True, file=log)
@@ -142,15 +170,43 @@ def main(argv=None) -> int:
                              "git_sha": results["_meta"]["git_sha"],
                              "config": bench_config(mod),
                              "error": f"{type(e).__name__}: {e}"}
+    if recorder is not None:
+        from repro.obs import set_recorder, write_chrome_trace
+        set_recorder(None)             # in-process hygiene (tests)
+        stats = recorder.stats()
+        write_chrome_trace(args.trace, recorder.events(),
+                           recorder_stats=stats)
+        now = recorder.last_ts
+        results["_meta"]["trace"] = {
+            "path": args.trace,
+            "events_emitted": stats["emitted"],
+            "events_recorded": stats["recorded"],
+            "dropped_overflow": stats["dropped_overflow"],
+            "sample_every": stats["sample_every"],
+            "by_kind": stats["by_kind"],
+            "segments": stats["segments"],
+            "series": series.snapshot(now),
+            "slo": slo.status(now),
+        }
+        print(f"\n[trace -> {args.trace}: {stats['recorded']} events "
+              f"recorded of {stats['emitted']} emitted; summarize with "
+              f"`python -m repro.obs.report {args.trace}`]", file=log)
+
     if args.json:
         from .common import sanitize_json
+        # allow_nan=False backstops sanitize_json: a NaN that somehow
+        # survives is a loud error, never a bare-NaN literal; default=str
+        # still catches exotic non-JSON types (after sanitize_json has
+        # already unpacked dataclasses/numpy, so it can no longer
+        # stringify a NaN into "nan")
         if args.json == "-":
             json.dump(sanitize_json(results), sys.stdout, indent=1,
-                      default=str)
+                      allow_nan=False, default=str)
             print()
         else:
             with open(args.json, "w") as f:
-                json.dump(sanitize_json(results), f, indent=1, default=str)
+                json.dump(sanitize_json(results), f, indent=1,
+                          allow_nan=False, default=str)
             print(f"\n[json results -> {args.json}]", file=log)
     return 1 if failures else 0
 

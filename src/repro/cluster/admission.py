@@ -25,6 +25,8 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Optional, Tuple
 
 from ..core.request import Request, RequestState, TenantTier
+from ..obs import events as _tr
+from ..obs import resolve_recorder
 
 SHED_RATE_LIMIT = "rate_limited"
 SHED_BACKPRESSURE = "backpressure"
@@ -101,8 +103,10 @@ class ShedRecord:
 class GlobalAdmission:
     """Tenant-rate-limited, backpressure-aware front door."""
 
-    def __init__(self, config: Optional[AdmissionConfig] = None) -> None:
+    def __init__(self, config: Optional[AdmissionConfig] = None,
+                 trace=None) -> None:
         self.cfg = config or AdmissionConfig()
+        self.trace = resolve_recorder(trace)
         self.buckets: Dict[TenantTier, TokenBucket] = {
             t: TokenBucket(self.cfg.bucket_capacity[t],
                            self.cfg.refill_rate[t])
@@ -122,6 +126,10 @@ class GlobalAdmission:
         if not self.buckets[req.tenant].try_consume(est_budget, now):
             return False, self._shed(req, SHED_RATE_LIMIT, est_budget, now)
         self.accepted[req.tenant] += 1
+        if self.trace.enabled:
+            self.trace.emit(now, _tr.ADMIT, req_id=req.req_id,
+                            tenant=req.tenant.label,
+                            est_budget=est_budget)
         return True, None
 
     def shed_no_replica(self, req: Request, est_budget: float,
@@ -144,6 +152,10 @@ class GlobalAdmission:
         self.shed_log.append(ShedRecord(
             time=now, req_id=req.req_id, tenant=req.tenant.label,
             reason=reason, est_budget=est_budget))
+        if self.trace.enabled:
+            self.trace.emit(now, _tr.SHED, req_id=req.req_id,
+                            tenant=req.tenant.label, reason=reason,
+                            est_budget=est_budget)
         return reason
 
     # --- accounting ----------------------------------------------------

@@ -21,6 +21,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from ..obs import events as _tr
+from ..obs import resolve_recorder
 from .replica import Replica, ReplicaRole, ReplicaState
 
 SCALE_UP = "up"
@@ -63,10 +65,12 @@ class ScaleEvent:
 class Autoscaler:
     """Hysteresis + cooldown scaling decisions over the replica pool."""
 
-    def __init__(self, config: Optional[AutoscalerConfig] = None) -> None:
+    def __init__(self, config: Optional[AutoscalerConfig] = None,
+                 trace=None) -> None:
         self.cfg = config or AutoscalerConfig()
         self.events: List[ScaleEvent] = []
         self._last_action_time = -float("inf")
+        self.trace = resolve_recorder(trace)
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -105,6 +109,12 @@ class Autoscaler:
             self.events.append(ScaleEvent(
                 time=now, action=action, n_active=n_active,
                 queue_mass_per_replica=mass, utilization=util))
+            if self.trace.enabled:
+                self.trace.emit(
+                    now, _tr.SCALE_UP if action == SCALE_UP
+                    else _tr.SCALE_DOWN,
+                    n_active=n_active, queue_mass_per_replica=mass,
+                    utilization=util)
         return action
 
     def pick_drain_target(self, replicas: Sequence[Replica]) -> Optional[Replica]:
@@ -146,8 +156,9 @@ class RoleAutoscaler(Autoscaler):
 
     ROLES = (ReplicaRole.PREFILL, ReplicaRole.DECODE)
 
-    def __init__(self, config: Optional[RoleAutoscalerConfig] = None) -> None:
-        super().__init__(config or RoleAutoscalerConfig())
+    def __init__(self, config: Optional[RoleAutoscalerConfig] = None,
+                 trace=None) -> None:
+        super().__init__(config or RoleAutoscalerConfig(), trace=trace)
 
     @staticmethod
     def role_signals(replicas: Sequence[Replica],
@@ -229,6 +240,12 @@ class RoleAutoscaler(Autoscaler):
             time=now, action=action, n_active=sig[2],
             queue_mass_per_replica=sig[0], utilization=sig[1],
             role=role.value))
+        if self.trace.enabled:
+            self.trace.emit(
+                now, _tr.SCALE_UP if action == SCALE_UP
+                else _tr.SCALE_DOWN,
+                role=role.value, n_active=sig[2],
+                queue_mass_per_replica=sig[0], utilization=sig[1])
         return action, role
 
     def pick_drain_target(self, replicas: Sequence[Replica],

@@ -28,6 +28,8 @@ from typing import List, Optional, Sequence
 from ..core.estimator import AdaptiveTokenEstimator, DriftConfig
 from ..core.request import Request
 from ..core.scheduler import DriftScheduler
+from ..obs import events as tr
+from ..obs import resolve_recorder
 from ..serving.engine import EngineConfig, ServingEngine
 from ..serving.metrics import RunMetrics, summarize_run
 from .admission import GlobalAdmission
@@ -71,7 +73,8 @@ class EngineClusterDriver:
 
     def __init__(self, engines: Sequence[ServingEngine],
                  routing: str | RoutingPolicy = "drift_aware",
-                 admission: Optional[GlobalAdmission] = None) -> None:
+                 admission: Optional[GlobalAdmission] = None,
+                 trace=None) -> None:
         if not engines:
             raise ValueError("need at least one engine")
         stores = {id(e.sched.estimator.bias_store) for e in engines}
@@ -82,7 +85,19 @@ class EngineClusterDriver:
                 f"got {len(stores)} distinct bias stores")
         self.replicas = [EngineReplica(i, e) for i, e in enumerate(engines)]
         self.estimator = engines[0].sched.estimator
-        self.router = ClusterRouter(routing, self.estimator)
+        self.trace = resolve_recorder(trace)
+        if self.trace.enabled:
+            # stamp replica ids onto the engines' emissions (only when
+            # live — never stomp an explicitly un-traced engine)
+            if admission is not None:
+                admission.trace = self.trace
+            for rep in self.replicas:
+                rep.engine.trace = self.trace
+                rep.engine.trace_rid = rep.rid
+                rep.engine.sched.drift.trace = self.trace
+                rep.engine.sched.drift.trace_rid = rep.rid
+        self.router = ClusterRouter(routing, self.estimator,
+                                    trace=self.trace)
         self.admission = admission
         self.n_shed = 0
         self._last_submit = 0.0
@@ -92,6 +107,9 @@ class EngineClusterDriver:
         """Front door: returns False when the request was shed."""
         self._last_submit = max(self._last_submit, now)
         est = self.router.price(req)
+        if self.trace.enabled:
+            self.trace.emit(now, tr.ARRIVE, req_id=req.req_id,
+                            tenant=req.tenant.label, est_budget=est)
         if self.admission is not None:
             mass = sum(r.token_mass() for r in self.replicas)
             ok, _ = self.admission.offer(req, est, now, mass)
@@ -102,8 +120,17 @@ class EngineClusterDriver:
         if target is None:
             if self.admission is not None:
                 self.admission.shed_no_replica(req, est, now)
+            elif self.trace.enabled:
+                # no front door to account (and trace) the shed
+                self.trace.emit(now, tr.SHED, req_id=req.req_id,
+                                tenant=req.tenant.label,
+                                reason="no_replica", est_budget=est)
             self.n_shed += 1
             return False
+        if self.trace.enabled and self.admission is None:
+            # no front door: placement is the admission decision
+            self.trace.emit(now, tr.ADMIT, req_id=req.req_id,
+                            tenant=req.tenant.label, est_budget=est)
         # the chosen engine's resident-prefix overlap prices the
         # admission estimate (estimate(cached_tokens=...) discounts
         # T_input only; 0 without a prefix cache) — fed from an actual
@@ -125,6 +152,10 @@ class EngineClusterDriver:
         # start the clock at the latest submit time so completion
         # timestamps never precede arrivals (negative e2e latencies)
         now = self._last_submit
+        if self.trace.enabled:
+            self.trace.begin_segment(
+                f"engine_cluster:{self.router.policy.name}"
+                f"/{self.replicas[0].sched.policy.name}")
         for _ in range(max_steps):
             if all(rep.is_idle() for rep in self.replicas):
                 break
@@ -148,7 +179,7 @@ def make_engine_cluster(model_cfg, params, n_replicas: int, *,
                         engine_config: Optional[EngineConfig] = None,
                         drift_config: Optional[DriftConfig] = None,
                         admission: Optional[GlobalAdmission] = None,
-                        ) -> EngineClusterDriver:
+                        trace=None) -> EngineClusterDriver:
     """Convenience constructor: N engines over one model's params (the
     common deployment — replicas are copies of the same model), all
     schedulers sharing one estimator."""
@@ -159,4 +190,5 @@ def make_engine_cluster(model_cfg, params, n_replicas: int, *,
                       engine_config)
         for _ in range(n_replicas)
     ]
-    return EngineClusterDriver(engines, routing=routing, admission=admission)
+    return EngineClusterDriver(engines, routing=routing,
+                               admission=admission, trace=trace)

@@ -47,6 +47,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from ..core.admission import count_tokens
 from ..core.estimator import AdaptiveTokenEstimator
 from ..core.request import Request
+from ..obs import events as tr
+from ..obs import resolve_recorder
 from .replica import Replica, ReplicaRole, ReplicaState, _budget
 
 
@@ -369,13 +371,14 @@ class ClusterRouter:
 
     def __init__(self, policy: str | RoutingPolicy,
                  estimator: AdaptiveTokenEstimator,
-                 record_log: bool = True) -> None:
+                 record_log: bool = True, trace=None) -> None:
         self.policy: RoutingPolicy = (
             policy if isinstance(policy, RoutingPolicy)
             else make_routing_policy(policy))
         self.estimator = estimator
         self.log: List[RoutingRecord] = []
         self._record = record_log
+        self.trace = resolve_recorder(trace)
 
     def price(self, req: Request) -> float:
         """Estimated token budget (Eq. 1) under the current bias state.
@@ -406,6 +409,11 @@ class ClusterRouter:
             self.log.append(RoutingRecord(
                 time=now, req_id=req.req_id, tenant=req.tenant.label,
                 est_budget=est, rid=chosen.rid))
+        if self.trace.enabled:
+            self.trace.emit(now, tr.ROUTE, req_id=req.req_id,
+                            rid=chosen.rid, tenant=req.tenant.label,
+                            stage="admit", policy=self.policy.name,
+                            est_budget=est)
         return chosen
 
     def route_decode(self, replicas: Sequence[Replica], req: Request,
@@ -431,6 +439,11 @@ class ClusterRouter:
             self.log.append(RoutingRecord(
                 time=now, req_id=req.req_id, tenant=req.tenant.label,
                 est_budget=est, rid=chosen.rid, stage="decode"))
+        if self.trace.enabled:
+            self.trace.emit(now, tr.ROUTE, req_id=req.req_id,
+                            rid=chosen.rid, tenant=req.tenant.label,
+                            stage="decode", policy=self.policy.name,
+                            est_budget=est)
         return chosen
 
     # --- work stealing -------------------------------------------------

@@ -63,6 +63,8 @@ from typing import Dict, List, Optional, Tuple
 from ..core.estimator import AdaptiveTokenEstimator, DriftConfig
 from ..core.request import Request
 from ..core.scheduler import DriftScheduler
+from ..obs import events as tr
+from ..obs import resolve_recorder
 from ..serving.cost_model import (CostModel, L4_QWEN_1_8B, decode_view,
                                   prefill_view)
 from ..serving.simulator import SimConfig, WorkerSimulator
@@ -249,7 +251,8 @@ class ClusterSimulator:
                  drift_config: Optional[DriftConfig] = None,
                  admission: Optional[GlobalAdmission] = None,
                  autoscaler: Optional[Autoscaler] = None,
-                 routing: Optional[RoutingPolicy] = None) -> None:
+                 routing: Optional[RoutingPolicy] = None,
+                 trace=None) -> None:
         self.plan = plan
         self.cfg = config or ClusterConfig()
         self.cost = cost_model or L4_QWEN_1_8B
@@ -257,8 +260,17 @@ class ClusterSimulator:
         self.estimator = AdaptiveTokenEstimator(drift_config or DriftConfig())
         self.admission = admission
         self.autoscaler = autoscaler
+        self.trace = resolve_recorder(trace)
+        if self.trace.enabled:
+            # the front door and the control plane emit into the same
+            # recorder the replicas use (cluster-scope events: rid=None)
+            if admission is not None:
+                admission.trace = self.trace
+            if autoscaler is not None:
+                autoscaler.trace = self.trace
+        self._arrived: set = set()     # req_ids already ARRIVE-traced
         self.router = ClusterRouter(routing or self.cfg.routing,
-                                    self.estimator)
+                                    self.estimator, trace=self.trace)
         self.pd_mode = self.router.policy.name == "pd_disaggregated"
         self.replicas: List[SimReplica] = []
         self.telemetry: List[ClusterTelemetry] = []
@@ -346,7 +358,10 @@ class ClusterSimulator:
             sink=lambda t, kind, payload, rid=rid:
                 self._push(t, "replica", (rid, kind, payload)),
             rng=self.rng,
-            complete_hook=hook)
+            complete_hook=hook,
+            trace=self.trace)
+        sim.trace_rid = rid
+        sched.drift.trace_rid = rid
         rep = SimReplica(rid, sched, sim, role=role)
         rep.state = state
         self.replicas.append(rep)
@@ -377,6 +392,11 @@ class ClusterSimulator:
         n_start = cfg.n_replicas
         n_cal = len(self.plan.calibration)
         total = len(self.plan)
+        if self.trace.enabled:
+            self.trace.begin_segment(
+                f"cluster:{self.router.policy.name}"
+                f"/{cfg.scheduler_policy}"
+                f"{':step' if cfg.step_engine else ''}")
         for t, req in self.plan.calibration:
             self._push(t, "arrival", req)
         for ft, rid in cfg.fail_events:
@@ -419,6 +439,11 @@ class ClusterSimulator:
     # ------------------------------------------------------------------
     def _on_arrival(self, req: Request, now: float) -> None:
         est = self.router.price(req)
+        if self.trace.enabled and req.req_id not in self._arrived:
+            # park-retries re-enter this handler: trace ARRIVE once
+            self._arrived.add(req.req_id)
+            self.trace.emit(now, tr.ARRIVE, req_id=req.req_id,
+                            tenant=req.tenant.label, est_budget=est)
         if self.admission is not None:
             ok, _ = self.admission.offer(req, est, now,
                                          self.cluster_token_mass())
@@ -433,6 +458,10 @@ class ClusterSimulator:
             else:
                 self.admission.shed_no_replica(req, est, now)
             return
+        if self.trace.enabled and self.admission is None:
+            # no front door: placement is the admission decision
+            self.trace.emit(now, tr.ADMIT, req_id=req.req_id,
+                            tenant=req.tenant.label, est_budget=est)
         # the chosen replica's resident-prefix overlap prices the
         # admission estimate: only the uncached suffix is budgeted
         # (0 without a prefix cache — the estimate is then unchanged)
@@ -448,6 +477,8 @@ class ClusterSimulator:
         rep = self.replicas[rid]
         if rkind == "repair" and rep.state is ReplicaState.FAILED:
             rep.state = ReplicaState.ACTIVE
+            if self.trace.enabled:
+                self.trace.emit(now, tr.REPLICA_RECOVER, rid=rid)
         self.completed_total += rep.sim.handle_event(now, rkind, rpayload)
 
     # --- P/D two-stage lifecycle ---------------------------------------
@@ -463,6 +494,14 @@ class ClusterSimulator:
         rep = self.replicas[rid]
         rep.n_handoffs_out += 1
         self.n_handoffs += 1
+        if self.trace.enabled:
+            # P/D TTFT anchor: the prompt's last token landed here
+            self.trace.emit(now, tr.FIRST_TOKEN, req_id=req.req_id,
+                            rid=rid, tenant=req.tenant.label,
+                            ttft=now - req.arrival_time)
+            self.trace.emit(now, tr.HANDOFF, req_id=req.req_id,
+                            rid=rid, tenant=req.tenant.label,
+                            edge="out")
         h = Handoff(req=req, src_rid=rid)
         self._in_transit[req.req_id] = h
         self._push(now + self._kv_delay(req), "handoff", h)
@@ -502,6 +541,11 @@ class ClusterSimulator:
         h.req.decode_rid = dst.rid
         if h.stolen:
             dst.n_stolen_in += 1   # credited where the work landed
+        if self.trace.enabled:
+            self.trace.emit(now, tr.HANDOFF, req_id=h.req.req_id,
+                            rid=dst.rid, tenant=h.req.tenant.label,
+                            edge="in", src_rid=h.src_rid,
+                            stolen=h.stolen)
         dst.accept_handoff(h.req, now, record=not h.stolen)
 
     # --- work stealing -------------------------------------------------
@@ -532,6 +576,13 @@ class ClusterSimulator:
                 req.n_steals += 1
                 victim.n_stolen_away += 1
                 self.n_stolen += 1
+                if self.trace.enabled:
+                    self.trace.emit(now, tr.STEAL, req_id=req.req_id,
+                                    rid=thief.rid,
+                                    tenant=req.tenant.label,
+                                    victim=victim.rid,
+                                    decode_ready=req.prefill_end
+                                    is not None)
                 if req.prefill_end is not None:
                     # decode-ready: the KV re-transfers from the victim;
                     # n_stolen_in is credited at delivery (the planned
@@ -562,6 +613,9 @@ class ClusterSimulator:
         if rep.state in (ReplicaState.STOPPED, ReplicaState.FAILED):
             return
         rep.state = ReplicaState.FAILED
+        if self.trace.enabled:
+            self.trace.emit(now, tr.REPLICA_FAIL, rid=rid,
+                            role=rep.role.value)
         # (2) cancel in-transit handoffs whose KV source died
         for h in [h for h in self._in_transit.values()
                   if h.src_rid == rid]:
@@ -636,6 +690,13 @@ class ClusterSimulator:
             n_starting=sum(1 for r in self.replicas
                            if r.state is ReplicaState.STARTING),
             queue_mass=mass, utilization=util))
+        if self.trace.enabled:
+            self.trace.emit(now, tr.GAUGE, name="cluster_queue_mass",
+                            value=mass)
+            self.trace.emit(now, tr.GAUGE, name="cluster_utilization",
+                            value=util)
+            self.trace.emit(now, tr.GAUGE, name="active_replicas",
+                            value=n_active)
 
     def _autoscale(self, now: float) -> None:
         """One autoscaler decision. A RoleAutoscaler on a P/D pool

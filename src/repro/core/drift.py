@@ -73,10 +73,21 @@ class ErrorStats:
 
 
 class DriftTracker:
-    """Accumulates drift samples during an experiment run."""
+    """Accumulates drift samples during an experiment run.
+
+    Owners that trace (worker simulators, serving engines) attach a
+    live recorder as ``self.trace`` (plus their replica id as
+    ``self.trace_rid``) so every drift sample also lands in the
+    lifecycle trace — this is the drift-MAE stream the observability
+    layer's sliding windows consume."""
 
     def __init__(self) -> None:
         self.samples: List[DriftSample] = []
+        # observability hooks: no-op sentinel unless an owner attaches
+        # a live recorder (imported lazily to keep core dependency-lean)
+        from ..obs.events import NULL_RECORDER
+        self.trace = NULL_RECORDER
+        self.trace_rid: Optional[int] = None
 
     def record(self, req: Request, now: float,
                phase: str = "unified") -> DriftSample:
@@ -94,6 +105,14 @@ class DriftTracker:
             cached_tokens=req.cached_prompt_tokens,
         )
         self.samples.append(s)
+        if self.trace.enabled:
+            from ..obs import events as _tr
+            self.trace.emit(now, _tr.DRIFT, req_id=req.req_id,
+                            rid=self.trace_rid, tenant=req.tenant.label,
+                            category=s.category, phase=phase,
+                            estimated=s.estimated_output,
+                            observed=s.observed_output,
+                            abs_error=s.abs_error)
         return s
 
     # ------------------------------------------------------------------

@@ -73,6 +73,8 @@ from ..core.scheduler import DriftScheduler
 from ..models.config import ModelConfig
 from ..models.registry import get_api
 from ..models.steps import sample_logits
+from ..obs import events as tr
+from ..obs import resolve_recorder
 from .kv_cache import PagedSeqLedger, prefix_page_key
 from .metrics import RunMetrics, summarize_run
 
@@ -128,12 +130,19 @@ class ServingEngine:
 
     def __init__(self, cfg: ModelConfig, params, scheduler: DriftScheduler,
                  config: Optional[EngineConfig] = None,
-                 extras: Optional[Dict] = None) -> None:
+                 extras: Optional[Dict] = None,
+                 trace=None) -> None:
         self.cfg = cfg
         self.params = params
         self.sched = scheduler
         self.ecfg = config or EngineConfig()
         self.extras = extras or {}
+        self.trace = resolve_recorder(trace)
+        # replica id stamped on emitted events; the cluster driver sets
+        # it after construction (None = standalone / unset)
+        self.trace_rid: Optional[int] = None
+        if self.trace.enabled:
+            self.sched.drift.trace = self.trace
         self.api = get_api(cfg)
         c = self.ecfg.chunk_prefill_tokens
         if c is not None and c < 1:
@@ -321,6 +330,8 @@ class ServingEngine:
         if self.ecfg.paged:
             key = (self._prefix_key(req, prompt_len)
                    if self.prefix_tree is not None else ())
+            evicted_before = (self.prefix_tree.n_evicted_pages
+                              if self.prefix_tree is not None else 0)
             cached = self.ledger.admit(slot, bucket, key, now)
             cached = min(cached, shared_eff)
             if key:
@@ -329,6 +340,18 @@ class ServingEngine:
                     self.prefix_tokens_saved += cached
                 else:
                     self.n_prefix_misses += 1
+                if self.trace.enabled:
+                    self.trace.emit(
+                        now, tr.PREFIX_HIT if cached > 0
+                        else tr.PREFIX_MISS,
+                        req_id=req.req_id, rid=self.trace_rid,
+                        tenant=req.tenant.label,
+                        **({"tokens": cached} if cached > 0 else {}))
+            if self.trace.enabled and self.prefix_tree is not None:
+                delta = self.prefix_tree.n_evicted_pages - evicted_before
+                if delta > 0:
+                    self.trace.emit(now, tr.PREFIX_EVICT,
+                                    rid=self.trace_rid, pages=delta)
         req.cached_prompt_tokens = cached
         st = self.slots[slot]
         st.req = req
@@ -375,12 +398,23 @@ class ServingEngine:
         st.pending_prefill = False
         st.batch = None
         st.req.prefill_end = now               # first token exists now
+        if self.trace.enabled:
+            self.trace.emit(now, tr.FIRST_TOKEN, req_id=st.req.req_id,
+                            rid=self.trace_rid,
+                            tenant=st.req.tenant.label,
+                            ttft=now - st.req.arrival_time)
 
     def _retire(self, slot: int, now: float) -> None:
         st = self.slots[slot]
         req = st.req
         req.exec_end = now
         self.sched.complete(req, st.generated, now)
+        if self.trace.enabled:
+            self.trace.emit(now, tr.COMPLETE, req_id=req.req_id,
+                            rid=self.trace_rid, tenant=req.tenant.label,
+                            observed=st.generated, e2e=req.e2e_latency,
+                            ttft=req.ttft,
+                            inter_token=req.inter_token_latency)
         if self.ecfg.paged:
             self.ledger.free(slot)
         self._join_order.remove(slot)
@@ -436,6 +470,10 @@ class ServingEngine:
             take = int(min(st.prefill_remaining, budget))
             st.prefill_remaining -= take
             budget -= take
+            if take and self.trace.enabled:
+                self.trace.emit(now, tr.PREFILL_CHUNK,
+                                req_id=st.req.req_id, rid=self.trace_rid,
+                                tenant=st.req.tenant.label, tokens=take)
             if st.prefill_remaining <= 0:
                 self._run_prefill(slot, now)
             if budget <= 0:
@@ -492,15 +530,31 @@ class ServingEngine:
         toks = np.asarray(toks)
 
         done = 0
+        tron = self.trace.enabled
         for i in decoding:
             st = self.slots[i]
             st.generated += 1
             st.last_token = int(toks[i])
+            if tron:
+                self.trace.emit(now, tr.DECODE_STEP,
+                                req_id=st.req.req_id, rid=self.trace_rid,
+                                n=st.generated)
             if st.generated >= st.target:       # oracle EOS
                 self._retire(i, now)
                 done += 1
         self.step_count += 1
         self.busy_steps += 1
+        if tron:
+            self.trace.emit(now, tr.GAUGE, rid=self.trace_rid,
+                            name="queue_depth",
+                            value=self.sched.queue_depth())
+            self.trace.emit(now, tr.GAUGE, rid=self.trace_rid,
+                            name="active_slots",
+                            value=len(self.active_slots()))
+            if self.ecfg.paged:
+                self.trace.emit(now, tr.GAUGE, rid=self.trace_rid,
+                                name="kv_free_pages",
+                                value=self.alloc.free_pages)
         return done
 
     def run_until_drained(self, *, max_steps: int = 100_000,
@@ -509,6 +563,9 @@ class ServingEngine:
         simulated wall-clock per engine step (CPU steps are not
         representative of TPU step time)."""
         now = 0.0
+        if self.trace.enabled:
+            self.trace.begin_segment(
+                f"engine:{self.sched.policy.name}")
         for _ in range(max_steps):
             if (self.sched.queue_depth() == 0
                     and not self.active_slots()):

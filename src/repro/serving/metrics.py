@@ -12,56 +12,16 @@ runs where no first-token anchor exists.
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence
+from typing import Dict, Iterable, List, Optional
 
 from ..core.request import JobClass, Request, TenantTier
+# the exact-statistics helpers moved to the shared observability layer
+# (repro.obs.stats); re-exported here so existing imports keep working
+from ..obs.stats import LatencyStats, jain_index, percentile
 
-
-def percentile(values: Sequence[float], p: float) -> float:
-    """Linear-interpolation percentile (numpy 'linear' method)."""
-    xs = sorted(values)
-    if not xs:
-        return float("nan")
-    if len(xs) == 1:
-        return xs[0]
-    rank = (p / 100.0) * (len(xs) - 1)
-    lo = int(math.floor(rank))
-    hi = min(lo + 1, len(xs) - 1)
-    frac = rank - lo
-    return xs[lo] * (1 - frac) + xs[hi] * frac
-
-
-def jain_index(values: Sequence[float]) -> float:
-    xs = [v for v in values if v is not None]
-    if not xs:
-        return float("nan")
-    s = sum(xs)
-    s2 = sum(v * v for v in xs)
-    return (s * s) / (len(xs) * s2) if s2 > 0 else 1.0
-
-
-@dataclass
-class LatencyStats:
-    n: int = 0
-    mean: float = float("nan")
-    p50: float = float("nan")
-    p95: float = float("nan")
-    p99: float = float("nan")
-
-    @classmethod
-    def of(cls, values: Sequence[float]) -> "LatencyStats":
-        vals = [v for v in values if v is not None]
-        if not vals:
-            return cls()
-        return cls(n=len(vals), mean=sum(vals) / len(vals),
-                   p50=percentile(vals, 50), p95=percentile(vals, 95),
-                   p99=percentile(vals, 99))
-
-    def as_dict(self) -> dict:
-        return {"n": self.n, "mean": self.mean, "p50": self.p50,
-                "p95": self.p95, "p99": self.p99}
+__all__ = ["LatencyStats", "RunMetrics", "jain_index", "percentile",
+           "summarize_run"]
 
 
 @dataclass

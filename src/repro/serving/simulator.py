@@ -82,6 +82,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 from ..core.request import Request, RequestState
 from ..core.scheduler import DriftScheduler
 from ..distributed.fault_tolerance import HeartbeatMonitor, StragglerDetector
+from ..obs import events as tr
+from ..obs import resolve_recorder
 from ..workload.generator import ArrivalPlan
 from .cost_model import CostModel, L4_QWEN_1_8B
 from .kv_cache import PagedAllocator, PrefixTree, prefix_page_key
@@ -229,7 +231,8 @@ class WorkerSimulator:
                  sink: Optional[Callable[[float, str, object], None]] = None,
                  rng: Optional[random.Random] = None,
                  complete_hook: Optional[
-                     Callable[[Request, float], bool]] = None) -> None:
+                     Callable[[Request, float], bool]] = None,
+                 trace=None) -> None:
         """``complete_hook(req, now) -> bool``, when given, is consulted
         as each request finishes: returning True means the owner took
         the request over (e.g. a P/D prefill replica handing the
@@ -237,8 +240,20 @@ class WorkerSimulator:
         completion path — ``sched.complete`` and its drift feedback —
         must not run for it. Disables hedged dispatch: intercepted
         requests never reach COMPLETED inside this simulator, so the
-        hedge-loser no-op guard cannot work."""
+        hedge-loser no-op guard cannot work.
+
+        ``trace`` is an observability recorder
+        (:class:`repro.obs.TraceRecorder`); None resolves the
+        process-global one (the no-op sentinel unless installed via
+        ``repro.obs.set_recorder``). Tracing is RNG-free and changes no
+        control flow: traced runs are bit-identical to untraced ones."""
         self.sched = scheduler
+        self.trace = resolve_recorder(trace)
+        # replica id stamped on emitted events; the cluster layer sets
+        # it after construction (None = standalone / unset)
+        self.trace_rid: Optional[int] = None
+        if self.trace.enabled:
+            self.sched.drift.trace = self.trace
         self._complete_hook = complete_hook
         self.plan = plan
         self.cfg = config or SimConfig()
@@ -317,7 +332,19 @@ class WorkerSimulator:
         cluster simulator) alike. ``telemetry`` is loop-owned and not
         handled here."""
         if kind == "arrival":
+            if self.trace.enabled and self._sink is None:
+                # standalone: this simulator IS the front door. Composed
+                # replicas skip this — the cluster already emitted
+                # arrive/admit/route before handing the request over.
+                self.trace.emit(now, tr.ARRIVE, req_id=payload.req_id,
+                                rid=self.trace_rid,
+                                tenant=payload.tenant.label)
             self.sched.submit(payload, now)
+            if self.trace.enabled and self._sink is None:
+                self.trace.emit(now, tr.ADMIT, req_id=payload.req_id,
+                                rid=self.trace_rid,
+                                tenant=payload.tenant.label,
+                                est_budget=payload.estimate.t_budget)
             self.sched.queues.record_depth(now)
             self._try_dispatch(now)
         elif kind == "batch_start":
@@ -339,6 +366,9 @@ class WorkerSimulator:
         elif kind == "repair":
             self.workers[payload].alive = True
             self.workers[payload].idle = True
+            if self.trace.enabled:
+                self.trace.emit(now, tr.WORKER_REPAIR, rid=self.trace_rid,
+                                wid=payload)
             self._try_dispatch(now)
         elif kind == "slow":
             self.workers[payload].slow = True
@@ -355,6 +385,10 @@ class WorkerSimulator:
             raise ValueError("standalone run() needs an ArrivalPlan")
         if self._sink is not None:
             raise ValueError("externally-driven simulator has no run loop")
+        if self.trace.enabled:
+            self.trace.begin_segment(
+                f"worker:{self.sched.policy.name}"
+                f"{':step' if self.cfg.step_engine else ''}")
         cfg = self.cfg
         n_cal = len(self.plan.calibration)
         for t, req in self.plan.calibration:
@@ -553,6 +587,13 @@ class WorkerSimulator:
             r.exec_end = now
             observed = min(r.true_output_tokens, r.max_tokens)
             self.sched.complete(r, observed, now)
+            if self.trace.enabled:
+                self.trace.emit(now, tr.COMPLETE, req_id=r.req_id,
+                                rid=self.trace_rid,
+                                tenant=r.tenant.label,
+                                observed=observed, e2e=r.e2e_latency,
+                                ttft=r.ttft,
+                                inter_token=r.inter_token_latency)
             done += 1
         if hedge_win and done:
             self.n_hedge_wins += 1
@@ -589,8 +630,19 @@ class WorkerSimulator:
                     slot.prefill_remaining = prefill - cached
                     self.n_prefix_hits += 1
                     self.prefix_tokens_saved += cached
+                    if self.trace.enabled:
+                        self.trace.emit(now, tr.PREFIX_HIT,
+                                        req_id=req.req_id,
+                                        rid=self.trace_rid,
+                                        tenant=req.tenant.label,
+                                        tokens=cached)
                 else:
                     self.n_prefix_misses += 1
+                    if self.trace.enabled:
+                        self.trace.emit(now, tr.PREFIX_MISS,
+                                        req_id=req.req_id,
+                                        rid=self.trace_rid,
+                                        tenant=req.tenant.label)
         if req.handoff_time is None:
             # record the realized hit only where prefill actually runs:
             # a decode-phase slot must not wipe the prefill replica's
@@ -669,10 +721,16 @@ class WorkerSimulator:
         best-effort."""
         if self.prefix_tree is None or not slot.prefix_key:
             return
+        evicted_before = self.prefix_tree.n_evicted_pages
         node, _ = self.prefix_tree.insert(slot.prefix_key, now)
         self._release_prefix(slot)
         self.prefix_tree.lock(node)
         slot.prefix_node = node
+        if self.trace.enabled:
+            delta = self.prefix_tree.n_evicted_pages - evicted_before
+            if delta > 0:
+                self.trace.emit(now, tr.PREFIX_EVICT, rid=self.trace_rid,
+                                pages=delta)
 
     def _complete_step_request(self, slot: SlotProgress, now: float) -> int:
         """Retire one finished slot: stamp timestamps and run the normal
@@ -684,6 +742,12 @@ class WorkerSimulator:
             return 0
         req.exec_end = now
         self.sched.complete(req, slot.decode_done, now)
+        if self.trace.enabled:
+            self.trace.emit(now, tr.COMPLETE, req_id=req.req_id,
+                            rid=self.trace_rid, tenant=req.tenant.label,
+                            observed=slot.decode_done, e2e=req.e2e_latency,
+                            ttft=req.ttft,
+                            inter_token=req.inter_token_latency)
         return 1
 
     def _finish_step(self, wid: int, gen: int, now: float) -> int:
@@ -698,11 +762,18 @@ class WorkerSimulator:
             return 0                       # stale event (aborted batch)
         done = 0
         still: List[SlotProgress] = []
+        tron = self.trace.enabled
         for slot, take, emits in batch.pending:
             ledger = self.token_ledger[slot.req.req_id]
             if take:
                 slot.prefill_remaining -= take
                 ledger[0] += take
+                if tron:
+                    self.trace.emit(now, tr.PREFILL_CHUNK,
+                                    req_id=slot.req.req_id,
+                                    rid=self.trace_rid,
+                                    tenant=slot.req.tenant.label,
+                                    tokens=take)
                 if slot.prefill_remaining <= 0:
                     self._on_slot_prefilled(slot, now)
             if emits:
@@ -712,6 +783,17 @@ class WorkerSimulator:
                     # first token observed at this iteration's end: the
                     # honest unified-replica TTFT anchor
                     slot.req.prefill_end = now
+                    if tron:
+                        self.trace.emit(
+                            now, tr.FIRST_TOKEN,
+                            req_id=slot.req.req_id, rid=self.trace_rid,
+                            tenant=slot.req.tenant.label,
+                            ttft=now - slot.req.arrival_time)
+                elif tron:
+                    self.trace.emit(now, tr.DECODE_STEP,
+                                    req_id=slot.req.req_id,
+                                    rid=self.trace_rid,
+                                    n=slot.decode_done)
             finished = (slot.prefill_remaining <= 0
                         and slot.decode_done >= slot.target)
             if not finished:
@@ -773,10 +855,18 @@ class WorkerSimulator:
             # is untouched because aborted work never fed back).
             self.prefix_tree.clear()
             self.n_cache_invalidations += 1
+        if self.trace.enabled:
+            self.trace.emit(now, tr.WORKER_FAIL, rid=self.trace_rid,
+                            wid=wid, n_requeued=len(reqs))
         # abort: un-spend the remaining busy time, re-queue the requests
         if reqs:
             w.busy_time -= max(w.busy_until - now, 0.0)
             for r in reqs:
+                if self.trace.enabled:
+                    self.trace.emit(now, tr.PREEMPT, req_id=r.req_id,
+                                    rid=self.trace_rid,
+                                    tenant=r.tenant.label,
+                                    reason="worker_fail")
                 if r.handoff_time is None:
                     # partial unified/prefill progress dies with the
                     # worker; clear the TTFT stamp so a retry re-anchors
@@ -848,6 +938,17 @@ class WorkerSimulator:
             active_requests=active,
             queue_depth=self.sched.queue_depth(),
         ))
+        if self.trace.enabled:
+            rid = self.trace_rid
+            self.trace.emit(now, tr.GAUGE, rid=rid, name="queue_depth",
+                            value=self.sched.queue_depth())
+            self.trace.emit(now, tr.GAUGE, rid=rid,
+                            name="active_requests", value=active)
+            self.trace.emit(now, tr.GAUGE, rid=rid, name="kv_free_pages",
+                            value=max(pool_pages - used_pages, 0))
+            for tier, depth in self.sched.queues.depths().items():
+                self.trace.emit(now, tr.GAUGE, rid=rid,
+                                name=f"queue_{tier.label}", value=depth)
 
 
 def __getattr__(name: str):

@@ -282,6 +282,89 @@ def test_step_engine_token_accounting_conserves(shapes, chunk, joins):
                                                r.max_tokens)
 
 
+@given(st.lists(st.floats(min_value=-1e6, max_value=1e6,
+                          allow_nan=False), min_size=1, max_size=400),
+       st.sampled_from([0.5, 0.9, 0.95, 0.99]))
+def test_p2_quantile_stays_in_observed_hull(values, p):
+    """The streaming P² estimate never escapes [min, max] of the
+    observed samples (marker heights are convex combinations of
+    observations), and is exact while n <= 5."""
+    from repro.obs.series import P2Quantile
+
+    q = P2Quantile(p)
+    for x in values:
+        q.add(x)
+    est = q.value()
+    assert min(values) - 1e-9 <= est <= max(values) + 1e-9
+    if len(values) <= 5:
+        assert math.isclose(est, percentile(values, p * 100.0),
+                            rel_tol=1e-9, abs_tol=1e-9)
+
+
+@given(st.integers(min_value=1, max_value=64),
+       st.integers(min_value=0, max_value=500))
+def test_recorder_stride_sampling_exact_count(stride, emissions):
+    """Counter-strided sampling records exactly ceil(m / stride) of m
+    emissions — deterministic, first emission always recorded."""
+    from repro.obs.events import DECODE_STEP, TraceRecorder
+
+    rec = TraceRecorder(sample_every={DECODE_STEP: stride})
+    for i in range(emissions):
+        rec.emit(float(i), DECODE_STEP, req_id=1)
+    assert len(rec.events()) == -(-emissions // stride)
+    assert rec.stats()["by_kind"].get(DECODE_STEP, 0) == emissions
+
+
+@settings(max_examples=60)
+@given(st.lists(st.tuples(st.integers(0, 6),      # prefill chunks
+                          st.integers(0, 40),     # decode steps
+                          st.booleans(),          # routed?
+                          st.booleans()),         # shed at the door?
+                min_size=1, max_size=20))
+def test_generated_lifecycles_always_validate(chains):
+    """Any chain built from the legal grammar (arrive -> admit ->
+    [route] -> prefill* -> first_token -> decode* -> complete, or an
+    immediate shed) passes validate_lifecycles; truncating its terminal
+    is flagged iff terminals are required."""
+    from repro.obs import events as tr
+
+    evs, seq = [], 0
+
+    def emit(ts, kind, req_id, **data):
+        nonlocal seq
+        evs.append(tr.TraceEvent(seq=seq, ts=ts, kind=kind,
+                                 req_id=req_id, data=data))
+        seq += 1
+
+    any_route = any(routed and not shed
+                    for _, _, routed, shed in chains)
+    for rid, (chunks, decodes, routed, shed) in enumerate(chains):
+        t = float(rid)
+        emit(t, tr.ARRIVE, rid)
+        if shed:
+            emit(t, tr.SHED, rid, reason="overload")
+            continue
+        emit(t, tr.ADMIT, rid)
+        if any_route:       # route-ful streams require routes pre-exec
+            emit(t, tr.ROUTE, rid, stage="admit")
+        for c in range(chunks):
+            t += 0.1
+            emit(t, tr.PREFILL_CHUNK, rid, tokens=16)
+        t += 0.1
+        emit(t, tr.FIRST_TOKEN, rid, ttft=t - rid)
+        for d in range(decodes):
+            t += 0.05
+            emit(t, tr.DECODE_STEP, rid)
+        t += 0.05
+        emit(t, tr.COMPLETE, rid, e2e=t - rid, ttft=0.1)
+    assert validate_lifecycles(evs) == []
+    truncated = evs[:-1]
+    if evs[-1].kind == tr.COMPLETE:
+        assert validate_lifecycles(truncated)
+        assert validate_lifecycles(truncated,
+                                   require_terminal=False) == []
+
+
 @given(st.integers(min_value=1, max_value=4096))
 def test_elastic_plan_always_uses_most_chips(n):
     plan = elastic_plan(n, model_parallel=16)
