@@ -1,0 +1,205 @@
+"""Beyond-paper: the flat-array simulator core vs the object-engine
+oracle at sweep scale — wall-clock, requests/second, and tail-latency
+stability across seeds.
+
+Protocol: the *deterministic sweep regime* the vector core is designed
+for (``repro.serving.vector_sim``): single L4-calibrated worker, batch
+capacity 32, fifo, step engine with frozen batch membership
+(``continuous_joins=False``) so pure-decode runs collapse into
+batch-drain epochs, zero service-time jitter, and strided
+telemetry/depth sampling. Both engines run the SAME requests: the plan
+is drawn once per (size, seed) with ``VectorPlan.generate`` and the
+object arm consumes ``to_arrival_plan()`` of that exact plan — so the
+speedup column compares identical event trajectories, and the bench
+cross-checks makespan/completion equality on every co-run size.
+
+Why this regime for the headline: per-iteration jitter draws and
+per-boundary continuous joins are sequential rng/queue semantics that
+*any* bit-exact engine must replay one by one — the parity suite
+(tests/test_vector_parity.py) locks those arms bit-for-bit at small N,
+while this bench measures the regime where the array core's epoch
+collapse has leverage. The acceptance bar is the ``speedup_at_headline``
+figure: >= 20x object requests/second at 10^5 requests.
+
+Smoke mode: ``BENCH_SMOKE=1`` drops the 10^5/10^6 sizes and runs one
+seed (CI's benchmark smoke step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+from repro.core.scheduler import DriftScheduler
+from repro.obs.stats import percentile
+from repro.serving.cost_model import L4_QWEN_1_8B
+from repro.serving.simulator import SimConfig, make_worker_simulator
+from repro.workload.generator import GeneratorConfig, VectorPlan
+
+from .common import fmt_table, save_json
+
+#: request counts swept on BOTH engines (object oracle included)
+SIZES = (1_000, 10_000, 100_000)
+#: request counts swept on the vector core only (the object engine
+#: would need ~8 minutes at 10^6; the 10^5 co-run anchors the ratio)
+VECTOR_ONLY_SIZES = (1_000_000,)
+#: the co-run size whose object/vector ratio is the headline figure
+HEADLINE_SIZE = 100_000
+SEEDS = (1, 2, 3)                 # tail-stability sweep
+STABILITY_N = 10_000
+BATCH_CAPACITY = 32
+POLICY = "fifo"
+#: telemetry/depth sampling stride in the sweep regime (documented
+#: divergence knob: stride > 1 subsamples diagnostics, it never
+#: changes scheduling)
+SAMPLE_STRIDE = 64
+
+_SMOKE = os.environ.get("BENCH_SMOKE", "").strip().lower() \
+    not in ("", "0", "false", "no")
+
+#: zero service-time jitter: the deterministic sweep regime (jitter()
+#: returns 1.0 without consuming rng state, so this is exactly the
+#: object engine's trajectory with sigma = 0, not an approximation)
+_ZERO_JITTER = dataclasses.replace(L4_QWEN_1_8B, jitter_sigma=0.0)
+
+
+def _protocol() -> dict:
+    if _SMOKE:
+        return {"sizes": (1_000, 10_000), "vector_only": (),
+                "headline": 10_000, "seeds": (1,), "stability_n": 4_000}
+    return {"sizes": SIZES, "vector_only": VECTOR_ONLY_SIZES,
+            "headline": HEADLINE_SIZE, "seeds": SEEDS,
+            "stability_n": STABILITY_N}
+
+
+def _sim_config(backend: str) -> SimConfig:
+    return SimConfig(step_engine=True, n_workers=1,
+                     batch_capacity=BATCH_CAPACITY, seed=1,
+                     continuous_joins=False,
+                     telemetry_stride=SAMPLE_STRIDE,
+                     depth_stride=SAMPLE_STRIDE, backend=backend)
+
+
+def _plan(n: int, seed: int) -> VectorPlan:
+    return VectorPlan.generate(
+        GeneratorConfig(total_requests=n, calibration_requests=n // 3,
+                        seed=seed), seed=seed)
+
+
+def _run_vector(vp: VectorPlan):
+    t0 = time.perf_counter()
+    sim = make_worker_simulator(DriftScheduler(policy=POLICY), vp,
+                                _sim_config("vector"), _ZERO_JITTER)
+    metrics = sim.run()
+    return time.perf_counter() - t0, metrics, sim
+
+def _run_object(vp: VectorPlan):
+    # the honest same-input oracle arm: fresh Request objects carrying
+    # this plan's req_ids and draws
+    plan = vp.to_arrival_plan()
+    t0 = time.perf_counter()
+    sim = make_worker_simulator(DriftScheduler(policy=POLICY), plan,
+                                _sim_config("object"), _ZERO_JITTER)
+    metrics = sim.run()
+    return time.perf_counter() - t0, metrics, sim
+
+
+def run() -> dict:
+    proto = _protocol()
+    out = {"smoke": _SMOKE,
+           "protocol": {"sizes": list(proto["sizes"]),
+                        "vector_only": list(proto["vector_only"]),
+                        "headline_size": proto["headline"],
+                        "seeds": list(proto["seeds"]),
+                        "stability_n": proto["stability_n"],
+                        "policy": POLICY,
+                        "batch_capacity": BATCH_CAPACITY,
+                        "sample_stride": SAMPLE_STRIDE,
+                        "jitter_sigma": 0.0,
+                        "continuous_joins": False},
+           "scale": [], "stability": {}}
+
+    for n in proto["sizes"]:
+        vp = _plan(n, seed=7)
+        tv, mv, _ = _run_vector(vp)
+        to, mo, _ = _run_object(vp)
+        out["scale"].append({
+            "n": n,
+            "vector_wall_s": tv, "vector_rps": n / tv,
+            "object_wall_s": to, "object_rps": n / to,
+            "speedup_x": to / tv,
+            "trajectory_match": (mo.makespan == mv.makespan
+                                 and mo.n_completed == mv.n_completed
+                                 and mo.e2e.p99 == mv.e2e.p99),
+        })
+    for n in proto["vector_only"]:
+        vp = _plan(n, seed=7)
+        tv, mv, _ = _run_vector(vp)
+        out["scale"].append({
+            "n": n,
+            "vector_wall_s": tv, "vector_rps": n / tv,
+            "object_wall_s": None, "object_rps": None,
+            "speedup_x": None, "trajectory_match": None,
+        })
+
+    # tail stability: per-seed e2e P99/P99.9 from the state columns
+    # (different seeds = different workload draws; the spread shows the
+    # tail statistic is workload-stable, not a single-draw artifact)
+    p99s, p999s = [], []
+    for seed in proto["seeds"]:
+        vp = _plan(proto["stability_n"], seed=seed)
+        _, _, sim = _run_vector(vp)
+        e2e = (sim.state.completion - sim.state.arrival).tolist()
+        p99s.append(percentile(e2e, 99.0))
+        p999s.append(percentile(e2e, 99.9))
+    out["stability"] = {
+        "p99_per_seed": p99s, "p999_per_seed": p999s,
+        "p99_spread_rel": ((max(p99s) - min(p99s))
+                           / (sum(p99s) / len(p99s))),
+        "p999_spread_rel": ((max(p999s) - min(p999s))
+                            / (sum(p999s) / len(p999s))),
+    }
+
+    head = next(r for r in out["scale"] if r["n"] == proto["headline"])
+    out["speedup_at_headline"] = {
+        "n": head["n"], "speedup_x": head["speedup_x"],
+        "object_rps": head["object_rps"],
+        "vector_rps": head["vector_rps"],
+        "meets_20x": head["speedup_x"] >= 20.0,
+    }
+
+    save_json("vector_scale", out)
+    return out
+
+
+def report(out: dict) -> str:
+    rows = []
+    for r in out["scale"]:
+        rows.append([
+            f"{r['n']:,}",
+            f"{r['vector_rps']:,.0f}", f"{r['vector_wall_s']:.2f}",
+            "-" if r["object_rps"] is None else f"{r['object_rps']:,.0f}",
+            "-" if r["object_wall_s"] is None
+            else f"{r['object_wall_s']:.2f}",
+            "-" if r["speedup_x"] is None else f"{r['speedup_x']:.1f}x",
+            {True: "yes", False: "NO", None: "-"}[r["trajectory_match"]],
+        ])
+    s = fmt_table(
+        ["requests", "vec rps", "vec s", "obj rps", "obj s",
+         "speedup", "traj match"],
+        rows,
+        "Vector core vs object oracle, deterministic sweep regime "
+        f"({'SMOKE' if out['smoke'] else 'full'}; same plan both arms)")
+    st = out["stability"]
+    s += ("\ntail stability over seeds "
+          f"{out['protocol']['seeds']} at n={out['protocol']['stability_n']}: "
+          f"e2e P99 spread {100 * st['p99_spread_rel']:.1f}% "
+          f"(per-seed {['%.1f' % v for v in st['p99_per_seed']]}), "
+          f"P99.9 spread {100 * st['p999_spread_rel']:.1f}%")
+    h = out["speedup_at_headline"]
+    s += (f"\nheadline: {h['speedup_x']:.1f}x object throughput at "
+          f"n={h['n']:,} ({h['object_rps']:,.0f} -> "
+          f"{h['vector_rps']:,.0f} simulated requests/s; "
+          f"acceptance >= 20x: {'MET' if h['meets_20x'] else 'NOT MET'})")
+    return s

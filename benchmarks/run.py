@@ -37,7 +37,7 @@ from . import (bench_bias_convergence, bench_chunked_prefill,
                bench_fault_tolerance, bench_gpu_exec_latency,
                bench_pd_disagg, bench_prefix_cache, bench_queue_dynamics,
                bench_roofline, bench_semantic_runtime, bench_tail_latency,
-               bench_tenant_qos, bench_wait_by_class)
+               bench_tenant_qos, bench_vector_scale, bench_wait_by_class)
 
 BENCHES = [
     ("bias_convergence (Fig 5)", bench_bias_convergence),
@@ -53,6 +53,7 @@ BENCHES = [
     ("pd_disagg (beyond-paper)", bench_pd_disagg),
     ("chunked_prefill (beyond-paper)", bench_chunked_prefill),
     ("prefix_cache (beyond-paper)", bench_prefix_cache),
+    ("vector_scale (beyond-paper)", bench_vector_scale),
     ("roofline (deliverable g)", bench_roofline),
 ]
 

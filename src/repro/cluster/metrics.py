@@ -106,6 +106,9 @@ class ClusterMetrics:
     n_handoffs_lost: int = 0
     n_stolen: int = 0
     prefix_cache: dict = field(default_factory=dict)
+    # execution-core backend the replicas ran on ("object" | "vector")
+    # — recorded so --json benchmark captures are self-describing
+    backend: str = "object"
 
     @property
     def shed_rate(self) -> float:
@@ -131,6 +134,7 @@ class ClusterMetrics:
             "n_handoffs_lost": self.n_handoffs_lost,
             "n_stolen": self.n_stolen,
             "prefix_cache": dict(self.prefix_cache),
+            "backend": self.backend,
         }
 
 
@@ -145,7 +149,8 @@ def summarize_cluster(routing: str, policy: str, bias_enabled: bool,
                       n_rerouted: int = 0,
                       n_handoffs: int = 0,
                       n_handoffs_lost: int = 0,
-                      n_stolen: int = 0) -> ClusterMetrics:
+                      n_stolen: int = 0,
+                      backend: str = "object") -> ClusterMetrics:
     """Aggregate one cluster run into :class:`ClusterMetrics`.
 
     ``completed`` are the finished requests across every replica (their
@@ -206,4 +211,5 @@ def summarize_cluster(routing: str, policy: str, bias_enabled: bool,
         n_handoffs_lost=n_handoffs_lost,
         n_stolen=n_stolen,
         prefix_cache=prefix_totals,
+        backend=backend,
     )

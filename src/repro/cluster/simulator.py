@@ -67,7 +67,8 @@ from ..obs import events as tr
 from ..obs import resolve_recorder
 from ..serving.cost_model import (CostModel, L4_QWEN_1_8B, decode_view,
                                   prefill_view)
-from ..serving.simulator import SimConfig, WorkerSimulator
+from ..serving.simulator import (SimConfig, WorkerSimulator,
+                                 make_worker_simulator)
 from ..workload.generator import ArrivalPlan
 from .admission import AdmissionConfig, GlobalAdmission
 from .autoscaler import (SCALE_DOWN, SCALE_UP, Autoscaler, RoleAutoscaler)
@@ -100,6 +101,13 @@ class ClusterConfig:
     chunk_prefill_tokens: Optional[int] = None
     continuous_joins: bool = True
     max_new_per_step: Optional[int] = None
+    # --- execution-core backend (serving.vector_sim): "object" keeps
+    # the per-Request step engine; "vector" provisions every replica as
+    # a StepVectorizedWorkerSimulator, which epoch-batches full
+    # pure-decode batches between cluster-visible events (requires
+    # step_engine; incompatible with pd_disaggregated, whose prefill
+    # replicas need per-request completion hooks).
+    backend: str = "object"
     # --- shared-prefix KV cache (radix tree per replica; requires
     # step_engine). Replicas skip prefilling resident full pages of a
     # request's shared prompt prefix; `prefix_aware` routing scores
@@ -272,6 +280,12 @@ class ClusterSimulator:
         self.router = ClusterRouter(routing or self.cfg.routing,
                                     self.estimator, trace=self.trace)
         self.pd_mode = self.router.policy.name == "pd_disaggregated"
+        if self.cfg.backend == "vector" and self.pd_mode:
+            raise ValueError(
+                "ClusterConfig.backend='vector' is incompatible with "
+                "pd_disaggregated routing: prefill replicas complete "
+                "through per-request hooks the vectorized core does "
+                "not expose. Use backend='object' for P/D runs.")
         self.replicas: List[SimReplica] = []
         self.telemetry: List[ClusterTelemetry] = []
         self.n_rerouted = 0
@@ -339,7 +353,7 @@ class ClusterSimulator:
             cost = decode_view(self.cost)
             phase = "decode"
             sched.feedback_phase = "decode"
-        sim = WorkerSimulator(
+        sim = make_worker_simulator(
             sched,
             config=SimConfig(
                 batch_capacity=self.cfg.batch_capacity,
@@ -353,6 +367,7 @@ class ClusterSimulator:
                 prefix_page_tokens=self.cfg.prefix_page_tokens,
                 phase=phase,
                 repair_time=self.cfg.repair_time,
+                backend=self.cfg.backend,
                 seed=self.cfg.seed),
             cost_model=cost,
             sink=lambda t, kind, payload, rid=rid:
@@ -772,4 +787,4 @@ class ClusterSimulator:
             replica_busy_time=busy, replica_completed=done,
             n_failed_dispatches=n_failed, n_rerouted=self.n_rerouted,
             n_handoffs=self.n_handoffs, n_handoffs_lost=self.n_handoffs_lost,
-            n_stolen=self.n_stolen)
+            n_stolen=self.n_stolen, backend=self.cfg.backend)

@@ -16,13 +16,18 @@
 from .cost_model import CostModel, L4_QWEN_1_8B
 from .engine import EngineConfig, ServingEngine
 from .kv_cache import (PagedAllocator, PagedPool, PrefixTree,
-                       prefix_page_key)
-from .metrics import RunMetrics, percentile, summarize_run
-from .simulator import SimConfig, WorkerSimulator
+                       pages_needed_array, prefix_page_key)
+from .metrics import (RunMetrics, percentile, summarize_run,
+                      summarize_run_arrays)
+from .simulator import SimConfig, WorkerSimulator, make_worker_simulator
+from .vector_sim import (StepVectorizedWorkerSimulator, VectorState,
+                         VectorWorkerSimulator)
 
 __all__ = [
     "CostModel", "EngineConfig", "L4_QWEN_1_8B",
     "PagedAllocator", "PagedPool", "PrefixTree", "RunMetrics",
-    "ServingEngine", "SimConfig", "WorkerSimulator", "percentile",
-    "prefix_page_key", "summarize_run",
+    "ServingEngine", "SimConfig", "StepVectorizedWorkerSimulator",
+    "VectorState", "VectorWorkerSimulator", "WorkerSimulator",
+    "make_worker_simulator", "pages_needed_array", "percentile",
+    "prefix_page_key", "summarize_run", "summarize_run_arrays",
 ]

@@ -80,6 +80,18 @@ class CostModel:
             t += self.t_base
         return t * jitter
 
+    def decode_step_time(self, n_decoding: int) -> float:
+        """Pre-jitter price of one pure-decode iteration with
+        ``n_decoding`` emitting slots. Delegates to :meth:`step_time`
+        so the value is bit-identical to what the per-step engine pays
+        (``x * 1.0 == x`` exactly in IEEE arithmetic) — the epoch-
+        batched fast paths in ``repro.serving.vector_sim`` multiply
+        this base by per-iteration jitter draws and MUST price each
+        collapsed iteration to the same float the object engine
+        would."""
+        return self.step_time(n_decoding, 0, include_base=False,
+                              jitter=1.0)
+
     def batch_time(self, requests: Iterable[Request], *,
                    cached_tokens: int = 0, jitter: float = 1.0) -> float:
         """Atomic-batch price — the derived/legacy view of

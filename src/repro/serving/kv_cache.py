@@ -195,6 +195,16 @@ def prefix_page_key(prefix_group: Optional[Hashable],
                  for i in range(shared_prefix_tokens // page_size))
 
 
+def pages_needed_array(n_tokens: np.ndarray, page_size: int) -> np.ndarray:
+    """Vectorized :meth:`PagedAllocator.pages_needed`: per-sequence
+    page counts (ceil division, min 1 page per live sequence) over an
+    int array of token counts. Used by the flat-array simulator core's
+    telemetry to reproduce the object engine's per-slot page rounding
+    without a per-slot Python loop."""
+    tokens = np.asarray(n_tokens)
+    return np.maximum(1, -(-tokens // page_size))
+
+
 class PrefixNode:
     """One radix-tree node: a run of consecutive prefix pages.
 

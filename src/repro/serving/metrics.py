@@ -21,7 +21,7 @@ from ..core.request import JobClass, Request, TenantTier
 from ..obs.stats import LatencyStats, jain_index, percentile
 
 __all__ = ["LatencyStats", "RunMetrics", "jain_index", "percentile",
-           "summarize_run"]
+           "summarize_run", "summarize_run_arrays"]
 
 
 @dataclass
@@ -113,4 +113,83 @@ def summarize_run(policy: str, bias_enabled: bool,
         makespan=makespan,
         decode=LatencyStats.of([r.decode_latency for r in reqs]),
         inter_token=LatencyStats.of([r.inter_token_latency for r in reqs]),
+    )
+
+
+def _nan_to_none(a) -> List[Optional[float]]:
+    """NaN -> None for array-to-stats handoff. CRITICAL for parity:
+    :meth:`LatencyStats.of` filters None (the object world's missing
+    value) but would happily average a NaN through."""
+    import math
+    return [None if math.isnan(x) else x for x in a.tolist()]
+
+
+def summarize_run_arrays(policy: str, bias_enabled: bool, state,
+                         order, *, busy_time: float = 0.0,
+                         n_failed_dispatches: int = 0) -> RunMetrics:
+    """Array-core twin of :func:`summarize_run`: computes the same
+    :class:`RunMetrics` from ``repro.serving.vector_sim.VectorState``
+    columns and a completion-order index array, bit-identically.
+
+    Per-request quantities are single IEEE subtractions/divisions on
+    float64 columns — the same operations the ``Request`` latency
+    properties perform on the same values — and the reductions reuse
+    the exact :class:`LatencyStats`/:func:`jain_index` helpers (Python
+    sequential sums), so a vector run and an object run with identical
+    event trajectories summarize to identical metrics."""
+    import math
+
+    import numpy as np
+
+    order = np.asarray(order, dtype=np.int64)
+    comp = state.completion[order]
+    arrival = state.arrival[order]
+    e2e_a = comp - arrival
+    waits_a = state.dispatch[order] - arrival
+    execs_a = state.exec_end[order] - state.exec_start[order]
+    decode_a = comp - state.prefill_end[order]
+    obs = state.observed[order].astype(np.float64)
+    with np.errstate(invalid="ignore"):
+        inter_a = np.where(obs > 1.0,
+                           decode_a / np.maximum(obs - 1.0, 1.0), np.nan)
+
+    tenants = state.tenant[order]
+    per_tenant = {}
+    for tier in TenantTier:
+        m = tenants == int(tier)
+        per_tenant[tier.label] = {
+            "latency": LatencyStats.of(_nan_to_none(e2e_a[m])).as_dict(),
+            "queue_wait": LatencyStats.of(
+                _nan_to_none(waits_a[m])).as_dict(),
+        }
+
+    classes = state.job_class[order]
+    per_class = {}
+    for code, jc in enumerate(JobClass):
+        sel = [w for w in waits_a[classes == code].tolist()
+               if not math.isnan(w)]
+        per_class[jc.value] = sum(sel) / len(sel) if sel else float("nan")
+
+    n = int(order.shape[0])
+    makespan = float(np.max(comp)) if n else 0.0
+    tenant_means = [per_tenant[t.label]["latency"]["mean"]
+                    for t in TenantTier
+                    if per_tenant[t.label]["latency"]["n"] > 0]
+
+    return RunMetrics(
+        policy=policy,
+        bias_enabled=bias_enabled,
+        e2e=LatencyStats.of(_nan_to_none(e2e_a)),
+        queue_wait=LatencyStats.of(_nan_to_none(waits_a)),
+        gpu_exec=LatencyStats.of(_nan_to_none(execs_a)),
+        per_tenant=per_tenant,
+        per_class_wait=per_class,
+        throughput_rps=n / makespan if makespan > 0 else 0.0,
+        gpu_utilization=busy_time / makespan if makespan > 0 else 0.0,
+        fairness=jain_index(tenant_means),
+        n_completed=n,
+        n_failed_dispatches=n_failed_dispatches,
+        makespan=makespan,
+        decode=LatencyStats.of(_nan_to_none(decode_a)),
+        inter_token=LatencyStats.of(_nan_to_none(inter_a)),
     )

@@ -143,6 +143,21 @@ class SimConfig:
     # Batch-granular by nature — mutually exclusive with step_engine.
     hedge: bool = False
     hedge_factor: float = 2.5
+    # --- execution backend selection ---
+    # "object": this event-heap, Request-object engine (the oracle).
+    # "vector": the flat-array core in repro.serving.vector_sim —
+    # standalone runs get VectorWorkerSimulator, sink-driven (cluster)
+    # replicas get StepVectorizedWorkerSimulator. Construct through
+    # make_worker_simulator(); WorkerSimulator itself refuses
+    # backend="vector" so the fast path can never silently fall back
+    # to the object engine.
+    backend: str = "object"
+    # sample every Nth telemetry tick (vector backend; the 200 ms tick
+    # cadence itself is kept — ticks participate in event ordering —
+    # only the stored snapshots are thinned). 1 = every tick (exact).
+    telemetry_stride: int = 1
+    # record every Nth queue-depth sample (vector backend). 1 = exact.
+    depth_stride: int = 1
     seed: int = 0
 
 
@@ -257,6 +272,21 @@ class WorkerSimulator:
         self._complete_hook = complete_hook
         self.plan = plan
         self.cfg = config or SimConfig()
+        if self.cfg.backend not in ("object", "vector"):
+            raise ValueError(
+                f"unknown SimConfig.backend {self.cfg.backend!r} "
+                "(expected 'object' or 'vector')")
+        if self.cfg.backend == "vector" and type(self) is WorkerSimulator:
+            # no-silent-fallback guard: constructing the object engine
+            # under backend="vector" would quietly run the slow path
+            # (and look like "vectorization has no speedup"). Vector
+            # subclasses pass; direct construction must go through
+            # make_worker_simulator().
+            raise ValueError(
+                "SimConfig.backend='vector' must be constructed via "
+                "make_worker_simulator() (or the vector classes in "
+                "repro.serving.vector_sim); refusing to silently run "
+                "the object engine")
         c = self.cfg.chunk_prefill_tokens
         if c is not None and c < 1:
             raise ValueError(
@@ -949,6 +979,50 @@ class WorkerSimulator:
             for tier, depth in self.sched.queues.depths().items():
                 self.trace.emit(now, tr.GAUGE, rid=rid,
                                 name=f"queue_{tier.label}", value=depth)
+
+
+def make_worker_simulator(scheduler: DriftScheduler,
+                          plan: Optional[ArrivalPlan] = None,
+                          config: Optional[SimConfig] = None,
+                          cost_model: Optional[CostModel] = None,
+                          sink: Optional[Callable[[float, str, object],
+                                                  None]] = None,
+                          rng: Optional[random.Random] = None,
+                          complete_hook: Optional[
+                              Callable[[Request, float], bool]] = None,
+                          trace=None):
+    """Backend-dispatching constructor for worker-group simulators.
+
+    ``SimConfig.backend`` picks the executor:
+
+    * ``"object"`` — :class:`WorkerSimulator` (the event-heap oracle).
+    * ``"vector"`` — the flat-array core: sink-driven (cluster)
+      replicas get :class:`StepVectorizedWorkerSimulator`, standalone
+      runs get :class:`VectorWorkerSimulator` built from the
+      scheduler's configuration. Never silently falls back — vector
+      construction either returns a vector class or raises.
+    """
+    cfg = config or SimConfig()
+    if cfg.backend == "object":
+        return WorkerSimulator(scheduler, plan, cfg, cost_model,
+                               sink=sink, rng=rng,
+                               complete_hook=complete_hook, trace=trace)
+    if cfg.backend != "vector":
+        raise ValueError(
+            f"unknown SimConfig.backend {cfg.backend!r} "
+            "(expected 'object' or 'vector')")
+    from .vector_sim import (StepVectorizedWorkerSimulator,
+                             VectorWorkerSimulator)
+    if sink is not None:
+        return StepVectorizedWorkerSimulator(
+            scheduler, plan, cfg, cost_model, sink=sink, rng=rng,
+            complete_hook=complete_hook, trace=trace)
+    if complete_hook is not None:
+        raise ValueError(
+            "backend='vector' standalone runs do not support "
+            "complete_hook (P/D handoff is an object-engine feature)")
+    return VectorWorkerSimulator.from_scheduler(
+        scheduler, plan, config=cfg, cost_model=cost_model, rng=rng)
 
 
 def __getattr__(name: str):

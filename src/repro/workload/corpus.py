@@ -29,7 +29,7 @@ import hashlib
 import math
 import random
 from dataclasses import dataclass
-from typing import Dict, List, Sequence
+from typing import Dict, List, Sequence, Tuple
 
 from ..core.request import Category
 
@@ -137,6 +137,20 @@ _T_BASE: Dict[Category, float] = {
     Category.TECHNICAL: 416.0,
     Category.REPORT: 600.0,
 }
+
+
+def generation_curve(category: Category) -> Tuple[float, float, float]:
+    """Public view of the hidden generation behaviour for one category:
+    ``(base, ref_prompt_len, len_exp)`` with ``base = T_base *
+    mean_ratio``, so the expected ground-truth output of a prompt of
+    length P is ``base * verbosity * (max(P,1)/ref)**len_exp`` before
+    sampling noise. Used by the batched array trace generator
+    (``workload.generator.VectorPlan``) to reproduce
+    :meth:`PromptSpec.sample_output` marginals without per-request
+    objects."""
+    prof = _GENERATION_PROFILE[category]
+    return (_T_BASE[category] * prof["mean_ratio"],
+            _REF_PROMPT_LEN[category], prof["len_exp"])
 
 
 def _stable_unit(s: str) -> float:

@@ -21,8 +21,16 @@ import random
 from dataclasses import dataclass, field
 from typing import Dict, Iterator, List, Mapping, Optional, Sequence, Tuple
 
+import numpy as np
+
 from ..core.request import Category, Request, TenantTier
-from .corpus import Corpus, build_corpus
+from .corpus import Corpus, build_corpus, generation_curve
+
+# Stable integer codes for the array representation (VectorPlan and the
+# vectorized simulator core index per-category/per-tier tables by these).
+CATEGORY_ORDER: Tuple[Category, ...] = tuple(Category)
+TIER_ORDER: Tuple[TenantTier, ...] = tuple(TenantTier)
+_CAT_CODE = {c: i for i, c in enumerate(CATEGORY_ORDER)}
 
 
 @dataclass(frozen=True)
@@ -202,3 +210,196 @@ class WorkloadGenerator:
         for _, r in plan:
             out[r.category.value] = out.get(r.category.value, 0) + 1
         return out
+
+
+# ---------------------------------------------------------------------------
+# Flat-array trace representation (vectorized simulator core)
+# ---------------------------------------------------------------------------
+@dataclass
+class VectorPlan:
+    """The two-burst arrival schedule as flat numpy arrays.
+
+    Row ``i`` is one request. The first ``n_calibration`` rows carry
+    *absolute* arrival times from t=0; the remaining rows carry offsets
+    relative to the stress-release instant (identical convention to
+    :class:`ArrivalPlan`). Rows are in arrival order within each burst.
+
+    Two constructors:
+
+    * :meth:`from_plan` converts an object :class:`ArrivalPlan`
+      losslessly (same requests, same ``req_id``s) — this is what the
+      differential parity suite uses so both engines consume the exact
+      same trace.
+    * :meth:`generate` draws the trace directly into arrays with a
+      ``numpy.random.Generator`` — *distribution*-equivalent to
+      :class:`WorkloadGenerator` (same category/tenant mixes, corpus
+      marginals, output-length law, Poisson bursts) but NOT
+      bit-identical to it (different RNG stream). Use it for 10^5+
+      sweeps where materialising Request objects is the bottleneck.
+    """
+
+    n_calibration: int
+    arrival: np.ndarray              # float64 [n]
+    tenant: np.ndarray               # int8    [n] TenantTier values
+    category: np.ndarray             # int8    [n] index into CATEGORY_ORDER
+    prompt_tokens: np.ndarray        # int32   [n]
+    max_tokens: np.ndarray           # int32   [n]
+    true_output_tokens: np.ndarray   # int32   [n]
+    shared_prefix_tokens: np.ndarray  # int32  [n]
+    prefix_gid: np.ndarray           # int32   [n]; -1 = no shareable prefix
+    req_id: np.ndarray               # int64   [n]
+    group_table: List[tuple]         # gid -> hashable prefix_group key
+    config: GeneratorConfig
+
+    def __len__(self) -> int:
+        return int(self.arrival.shape[0])
+
+    # -- lossless conversion from the object plan (parity path) --------
+    @classmethod
+    def from_plan(cls, plan: ArrivalPlan) -> "VectorPlan":
+        rows = list(plan.calibration) + list(plan.stress)
+        n = len(rows)
+        groups: Dict[tuple, int] = {}
+        table: List[tuple] = []
+        gid = np.full(n, -1, dtype=np.int32)
+        out = cls(
+            n_calibration=len(plan.calibration),
+            arrival=np.fromiter((t for t, _ in rows), dtype=np.float64,
+                                count=n),
+            tenant=np.fromiter((int(r.tenant) for _, r in rows),
+                               dtype=np.int8, count=n),
+            category=np.fromiter((_CAT_CODE[r.category] for _, r in rows),
+                                 dtype=np.int8, count=n),
+            prompt_tokens=np.fromiter((r.prompt_tokens for _, r in rows),
+                                      dtype=np.int32, count=n),
+            max_tokens=np.fromiter((r.max_tokens for _, r in rows),
+                                   dtype=np.int32, count=n),
+            true_output_tokens=np.fromiter(
+                (r.true_output_tokens for _, r in rows), dtype=np.int32,
+                count=n),
+            shared_prefix_tokens=np.fromiter(
+                (r.shared_prefix_tokens for _, r in rows), dtype=np.int32,
+                count=n),
+            prefix_gid=gid,
+            req_id=np.fromiter((r.req_id for _, r in rows), dtype=np.int64,
+                               count=n),
+            group_table=table,
+            config=plan.config,
+        )
+        for i, (_, r) in enumerate(rows):
+            if r.prefix_group is not None:
+                g = groups.setdefault(r.prefix_group, len(table))
+                if g == len(table):
+                    table.append(r.prefix_group)
+                gid[i] = g
+        return out
+
+    # -- batched array generation (scale path) -------------------------
+    @classmethod
+    def generate(cls, config: Optional[GeneratorConfig] = None,
+                 seed: Optional[int] = None,
+                 corpus: Optional[Corpus] = None) -> "VectorPlan":
+        cfg = config or GeneratorConfig()
+        corpus = corpus or build_corpus()
+        rng = np.random.default_rng(cfg.seed if seed is None else seed)
+        n = cfg.total_requests
+        n_cal = min(cfg.calibration_requests, n)
+
+        cats = list(cfg.category_weights.keys())
+        cat_w = np.asarray(list(cfg.category_weights.values()), dtype=float)
+        tiers = list(cfg.tenant_weights.keys())
+        tier_w = np.asarray(list(cfg.tenant_weights.values()), dtype=float)
+        cat_pick = rng.choice(len(cats), size=n, p=cat_w / cat_w.sum())
+        tier_pick = rng.choice(len(tiers), size=n, p=tier_w / tier_w.sum())
+
+        category = np.fromiter((_CAT_CODE[c] for c in cats),
+                               dtype=np.int8)[cat_pick]
+        tenant = np.fromiter((int(t) for t in tiers),
+                             dtype=np.int8)[tier_pick]
+
+        # corpus entry draw: uniform within the picked category, exactly
+        # like Corpus.sample, but over per-category token/verbosity arrays
+        prompt_base = np.zeros(n, dtype=np.float64)
+        verbosity = np.zeros(n, dtype=np.float64)
+        base = np.zeros(n, dtype=np.float64)
+        ref_len = np.zeros(n, dtype=np.float64)
+        len_exp = np.zeros(n, dtype=np.float64)
+        for k, cat in enumerate(cats):
+            mask = cat_pick == k
+            m = int(mask.sum())
+            if m == 0:
+                continue
+            entries = corpus.by_category[cat]
+            pts = np.asarray([p.prompt_tokens for p in entries], dtype=float)
+            verbs = np.asarray([p.latent_verbosity for p in entries],
+                               dtype=float)
+            pick = rng.integers(0, len(entries), size=m)
+            prompt_base[mask] = pts[pick]
+            verbosity[mask] = verbs[pick]
+            b, r, e = generation_curve(cat)
+            base[mask], ref_len[mask], len_exp[mask] = b, r, e
+
+        sigma = cfg.output_noise_sigma
+        noise = np.exp(rng.normal(0.0, sigma, size=n) - 0.5 * sigma ** 2)
+        raw_out = (base * verbosity
+                   * (np.maximum(prompt_base, 1.0) / ref_len) ** len_exp
+                   * noise)
+        true_out = np.clip(np.rint(raw_out), 1,
+                           cfg.max_tokens).astype(np.int32)
+
+        shared = int(cfg.shared_prefix_tokens)
+        prompt_tokens = (np.maximum(
+            1, np.rint(prompt_base * cfg.prompt_tokens_scale)).astype(
+                np.int32) + shared)
+
+        gid = np.full(n, -1, dtype=np.int32)
+        table: List[tuple] = []
+        if shared > 0:
+            g_per = max(cfg.prefix_groups_per_tenant, 1)
+            g = rng.integers(0, g_per, size=n).astype(np.int32)
+            gid = tenant.astype(np.int32) * g_per + g
+            table = [(tier.label, j) for tier in TIER_ORDER
+                     for j in range(g_per)]
+
+        arrival = np.zeros(n, dtype=np.float64)
+        if n_cal:
+            arrival[:n_cal] = np.cumsum(
+                rng.exponential(1.0 / cfg.calibration_rate, size=n_cal))
+        if n - n_cal:
+            arrival[n_cal:] = np.cumsum(
+                rng.exponential(1.0 / cfg.stress_rate, size=n - n_cal))
+
+        from ..core.request import _REQ_IDS
+        req_id = np.fromiter((next(_REQ_IDS) for _ in range(n)),
+                             dtype=np.int64, count=n)
+        return cls(n_calibration=n_cal, arrival=arrival, tenant=tenant,
+                   category=category, prompt_tokens=prompt_tokens,
+                   max_tokens=np.full(n, cfg.max_tokens, dtype=np.int32),
+                   true_output_tokens=true_out,
+                   shared_prefix_tokens=np.full(n, shared, dtype=np.int32),
+                   prefix_gid=gid, req_id=req_id, group_table=table,
+                   config=cfg)
+
+    # -- materialisation back into the object world --------------------
+    def to_arrival_plan(self) -> ArrivalPlan:
+        """Build the equivalent object :class:`ArrivalPlan` (fresh
+        Request objects carrying this plan's ``req_id``s), so the object
+        engine can run the exact same trace — the benchmark's honest
+        same-input oracle arm."""
+        rows: List[Tuple[float, Request]] = []
+        for i in range(len(self)):
+            g = int(self.prefix_gid[i])
+            r = Request(
+                tenant=TenantTier(int(self.tenant[i])),
+                category=CATEGORY_ORDER[int(self.category[i])],
+                prompt_tokens=int(self.prompt_tokens[i]),
+                max_tokens=int(self.max_tokens[i]),
+                true_output_tokens=int(self.true_output_tokens[i]),
+                prefix_group=(self.group_table[g] if g >= 0 else None),
+                shared_prefix_tokens=int(self.shared_prefix_tokens[i]),
+            )
+            r.req_id = int(self.req_id[i])
+            rows.append((float(self.arrival[i]), r))
+        return ArrivalPlan(calibration=rows[:self.n_calibration],
+                           stress=rows[self.n_calibration:],
+                           config=self.config)

@@ -357,12 +357,12 @@ def test_generated_lifecycles_always_validate(chains):
             emit(t, tr.DECODE_STEP, rid)
         t += 0.05
         emit(t, tr.COMPLETE, rid, e2e=t - rid, ttft=0.1)
-    assert validate_lifecycles(evs) == []
+    assert tr.validate_lifecycles(evs) == []
     truncated = evs[:-1]
     if evs[-1].kind == tr.COMPLETE:
-        assert validate_lifecycles(truncated)
-        assert validate_lifecycles(truncated,
-                                   require_terminal=False) == []
+        assert tr.validate_lifecycles(truncated)
+        assert tr.validate_lifecycles(truncated,
+                                      require_terminal=False) == []
 
 
 @given(st.integers(min_value=1, max_value=4096))
@@ -373,3 +373,70 @@ def test_elastic_plan_always_uses_most_chips(n):
     assert dp * tp + plan.dropped_chips == n
     # never wastes a full TP group
     assert n - dp * tp < tp
+
+
+# ---------------------------------------------------------------------
+# vectorized simulator core (repro.serving.vector_sim)
+# ---------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),   # workload seed
+       st.sampled_from(["fifo", "priority", "sjf", "weighted"]),
+       st.integers(min_value=1, max_value=3),        # workers
+       st.integers(min_value=2, max_value=8),        # batch capacity
+       st.booleans(),                                # chunked prefill
+       st.booleans(),                                # continuous joins
+       st.booleans(),                                # prefix cache
+       st.booleans())                                # preemption
+def test_vector_core_conservation(seed, policy, n_workers, cap,
+                                  chunked, joins, prefix, preempt):
+    """Conservation laws of the flat-array simulator core under
+    randomized drivers, checked at every step boundary: prefix-pool
+    pages are partitioned between the free list and the radix tree
+    (free + resident == pool), and every arrived request sits in
+    exactly one lifecycle bucket (queued + running + done == arrived).
+    ``tests/test_vector_parity.py`` carries the fixed-seed fallback of
+    this property — hypothesis is a CI-only dependency."""
+    from repro.serving.cost_model import L4_QWEN_1_8B
+    from repro.serving.simulator import SimConfig
+    from repro.serving.vector_sim import (S_COMPLETED, S_CREATED,
+                                          S_FAILED,
+                                          VectorWorkerSimulator)
+    from repro.workload.generator import (GeneratorConfig, VectorPlan,
+                                          WorkloadGenerator)
+
+    gen = WorkloadGenerator(GeneratorConfig(
+        total_requests=40, calibration_requests=6,
+        shared_prefix_tokens=96 if prefix else 0,
+        prefix_groups_per_tenant=2, seed=seed))
+    vplan = VectorPlan.from_plan(gen.plan())
+    cfg = SimConfig(
+        step_engine=True, n_workers=n_workers, batch_capacity=cap,
+        chunk_prefill_tokens=48 if chunked else None,
+        continuous_joins=joins, prefix_cache=prefix,
+        fail_times=(4.0,) if preempt else (), repair_time=2.0,
+        seed=seed)
+    vec = VectorWorkerSimulator(vplan, cfg, L4_QWEN_1_8B, policy=policy)
+
+    checks = {"n": 0}
+    inner = vec._finish_step
+
+    def checked(wid, gen_, now):
+        done = inner(wid, gen_, now)
+        st = vec.state
+        if vec.prefix_tree is not None:
+            alloc = vec.prefix_tree.allocator
+            assert (alloc.free_pages + vec.prefix_tree.total_pages()
+                    == alloc.n_pages)
+        n = len(st.req_id)
+        arrived = n - int((st.state[:n] == S_CREATED).sum())
+        in_buckets = int((st.state[:n] > S_CREATED).sum()
+                         - (st.state[:n] == S_FAILED).sum())
+        assert in_buckets == arrived
+        checks["n"] += 1
+        return done
+
+    vec._finish_step = checked
+    vec.run()
+    assert checks["n"] > 0
+    assert int((vec.state.state == S_COMPLETED).sum()) == len(vplan)

@@ -1,0 +1,338 @@
+"""Differential oracle: the vectorized simulator core must reproduce
+the object step engine bit-for-bit.
+
+``repro.serving.vector_sim`` re-implements the iteration-level worker
+simulator on flat numpy state so benchmarks can sweep 10^6-request
+workloads; the object engine stays authoritative. These tests run both
+engines on the *same* :class:`ArrivalPlan` (the :class:`VectorPlan`
+snapshot is taken before the object run mutates its ``Request``
+objects — ``req_id`` comes from a process-global counter, so two
+generator calls do NOT produce comparable ids) and require exact
+equality of:
+
+* completion order (the full req_id sequence),
+* every lifecycle stamp (dispatch / exec / prefill-end / completion),
+* token ledgers and prefix-cache hit/miss/saved/invalidation counters,
+* the entire ``RunMetrics`` dict — including ``busy_time``-derived
+  ``gpu_utilization``, which locks the float accumulation order,
+* telemetry samples and tenant-queue depth history.
+
+Arms cover the exact-parity policies (fifo / priority / sjf /
+weighted) crossed with chunked prefill, continuous joins, the prefix
+cache, preemption (worker failure + repair) and ``max_new_per_step``,
+plus the epoch-batched fast paths (single worker with jitter; many
+workers jitter-free) that collapse pure-decode runs. The ``aging``
+policy is order-equivalent but not bit-locked (its priority key is
+algebraically shifted) and is deliberately absent.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.policies import make_policy
+from repro.core.scheduler import DriftScheduler
+from repro.serving.cost_model import L4_QWEN_1_8B
+from repro.serving.simulator import SimConfig, WorkerSimulator, \
+    make_worker_simulator
+from repro.serving.vector_sim import (S_COMPLETED, S_CREATED,
+                                      StepVectorizedWorkerSimulator,
+                                      VectorWorkerSimulator)
+from repro.workload.generator import (GeneratorConfig, VectorPlan,
+                                      WorkloadGenerator)
+
+ZERO_JIT = dataclasses.replace(L4_QWEN_1_8B, jitter_sigma=0.0)
+
+
+def _eq(a, b):
+    """Exact equality, except NaN == NaN (empty-class sentinel means
+    the same absence on both sides)."""
+    if isinstance(a, dict) and isinstance(b, dict):
+        return a.keys() == b.keys() and all(_eq(a[k], b[k]) for k in a)
+    if isinstance(a, (list, tuple)) and isinstance(b, (list, tuple)):
+        return len(a) == len(b) and all(_eq(x, y) for x, y in zip(a, b))
+    if isinstance(a, float) and isinstance(b, float) \
+            and np.isnan(a) and np.isnan(b):
+        return True
+    return a == b
+
+N_TOTAL, N_CAL, SEED = 96, 12, 11
+
+
+def _plan():
+    gen = WorkloadGenerator(GeneratorConfig(
+        total_requests=N_TOTAL, calibration_requests=N_CAL,
+        shared_prefix_tokens=192, prefix_groups_per_tenant=2, seed=SEED))
+    return gen.plan()
+
+
+def _run_pair(policy, cfg, cost=L4_QWEN_1_8B, max_new=None):
+    plan = _plan()
+    vplan = VectorPlan.from_plan(plan)   # snapshot before object mutates
+    vec = VectorWorkerSimulator(vplan, cfg, cost, policy=policy,
+                                max_new_per_step=max_new)
+    mv = vec.run()
+    sched = DriftScheduler(policy=make_policy(policy),
+                           max_new_per_step=max_new)
+    obj = WorkerSimulator(sched, plan=plan, config=cfg, cost_model=cost)
+    mo = obj.run()
+    return sched, obj, mo, vec, mv
+
+
+def _assert_exact(sched, obj, mo, vec, mv):
+    st = vec.state
+    # 1. completion order: the full req_id sequence
+    obj_order = [int(r.req_id) for r in sched.completed]
+    vec_order = [int(st.req_id[i])
+                 for i in vec.sched.completed_order.view()]
+    assert obj_order == vec_order
+
+    # 2. every lifecycle stamp, exactly (None <-> NaN)
+    rows = {int(st.req_id[i]): i for i in range(len(st.req_id))}
+    for r in sched.completed:
+        i = rows[int(r.req_id)]
+        for name, ov, vv in [
+                ("arrival", r.arrival_time, st.arrival[i]),
+                ("enqueue", r.enqueue_time, st.enqueue[i]),
+                ("dispatch", r.dispatch_time, st.dispatch[i]),
+                ("exec_start", r.exec_start, st.exec_start[i]),
+                ("exec_end", r.exec_end, st.exec_end[i]),
+                ("prefill_end", r.prefill_end, st.prefill_end[i]),
+                ("completion", r.completion_time, st.completion[i])]:
+            if ov is None:
+                assert np.isnan(vv), (name, r.req_id)
+            else:
+                assert ov == vv, (name, r.req_id, ov, float(vv))
+        assert r.observed_output_tokens == st.observed[i], r.req_id
+        assert r.retries == st.retries[i], r.req_id
+        assert r.cached_prompt_tokens == st.cached_prompt_tokens[i]
+
+    # 3. token + prefix ledgers
+    ol, vl = obj.token_ledger, vec.token_ledger
+    assert {int(k) for k in ol} == set(vl)
+    for k, v in ol.items():
+        assert tuple(v) == tuple(vl[int(k)]), k
+    opl = getattr(obj, "prefix_ledger", {})
+    if opl:
+        vpl = vec.prefix_ledger
+        assert {int(k) for k in opl} == set(vpl)
+        for k, v in opl.items():
+            assert v == vpl[int(k)], k
+
+    # 4. engine counters
+    for a in ("n_steps", "n_joins", "n_failed_dispatches",
+              "n_prefix_hits", "n_prefix_misses", "prefix_tokens_saved",
+              "n_cache_invalidations"):
+        assert getattr(obj, a) == getattr(vec, a), a
+
+    # 5. the whole metrics dict — busy_time/gpu_util lock float order
+    assert _eq(mo.as_dict(), mv.as_dict())
+
+    # 6. telemetry + queue depth history
+    ot = [dataclasses.astuple(s) for s in obj.telemetry]
+    vt = [dataclasses.astuple(s) for s in vec.telemetry]
+    assert ot == vt
+    od = [tuple(d) for d in obj.sched.queues.depth_history]
+    vd = [tuple(d) for d in vec.sched.depth_history()]
+    assert od == vd
+
+
+BASE = dict(step_engine=True, n_workers=2, batch_capacity=4, seed=SEED)
+
+ARMS = [
+    ("fifo-plain", "fifo", {}, None),
+    ("priority-plain", "priority", {}, None),
+    ("sjf-plain", "sjf", {}, None),
+    ("weighted-plain", "weighted", {}, None),
+    ("fifo-chunked", "fifo", dict(chunk_prefill_tokens=64), None),
+    ("fifo-chunked-joins", "fifo",
+     dict(chunk_prefill_tokens=64, continuous_joins=True), None),
+    ("sjf-chunked-joins", "sjf",
+     dict(chunk_prefill_tokens=64, continuous_joins=True), None),
+    ("fifo-prefix", "fifo", dict(prefix_cache=True), None),
+    ("weighted-prefix-joins", "weighted",
+     dict(prefix_cache=True, continuous_joins=True,
+          chunk_prefill_tokens=64), None),
+    ("fifo-preempt", "fifo",
+     dict(fail_times=(5.0,), repair_time=3.0), None),
+    ("priority-preempt", "priority",
+     dict(fail_times=(5.0,), repair_time=3.0), None),
+    ("sjf-preempt-prefix-joins", "sjf",
+     dict(fail_times=(5.0,), repair_time=3.0, prefix_cache=True,
+          continuous_joins=True, chunk_prefill_tokens=64), None),
+    ("sjf-max-new", "sjf", {}, 2),
+    ("fifo-telemetry", "fifo", dict(telemetry_interval=0.5), None),
+]
+
+
+@pytest.mark.parametrize("tag,policy,extra,max_new", ARMS,
+                         ids=[a[0] for a in ARMS])
+def test_vector_matches_object_exactly(tag, policy, extra, max_new):
+    cfg = SimConfig(**BASE, **extra)
+    _assert_exact(*_run_pair(policy, cfg, max_new=max_new))
+
+
+EPOCH_ARMS = [
+    # single worker: jitter draws stay ordered, epochs legal under noise
+    ("1w-fifo-jitter", "fifo", L4_QWEN_1_8B,
+     dict(n_workers=1, batch_capacity=8)),
+    ("1w-sjf-joins-jitter", "sjf", L4_QWEN_1_8B,
+     dict(n_workers=1, batch_capacity=8, chunk_prefill_tokens=64,
+          continuous_joins=True)),
+    ("1w-prefix-preempt-jitter", "fifo", L4_QWEN_1_8B,
+     dict(n_workers=1, batch_capacity=8, prefix_cache=True,
+          continuous_joins=True, chunk_prefill_tokens=64,
+          fail_times=(5.0,), repair_time=3.0)),
+    ("1w-telemetry-jitter", "fifo", L4_QWEN_1_8B,
+     dict(n_workers=1, batch_capacity=8, telemetry_interval=0.5)),
+    # jitter-free cost model: epochs legal across many workers
+    ("2w-fifo-zerojit", "fifo", ZERO_JIT, dict()),
+    ("2w-sjf-joins-zerojit", "sjf", ZERO_JIT,
+     dict(chunk_prefill_tokens=64, continuous_joins=True)),
+    ("2w-preempt-zerojit", "fifo", ZERO_JIT,
+     dict(fail_times=(5.0,), repair_time=3.0)),
+]
+
+
+@pytest.mark.parametrize("tag,policy,cost,extra", EPOCH_ARMS,
+                         ids=[a[0] for a in EPOCH_ARMS])
+def test_epoch_fast_path_matches_object_exactly(tag, policy, cost, extra):
+    cfg = SimConfig(**{**BASE, **extra})
+    pair = _run_pair(policy, cfg, cost=cost)
+    vec = pair[3]
+    assert vec.n_epochs > 0, "arm must exercise the epoch fast path"
+    _assert_exact(*pair)
+
+
+def test_cluster_vector_backend_matches_object():
+    """ClusterSimulator(backend='vector') — the composed
+    StepVectorizedWorkerSimulator behind every replica — reproduces the
+    object cluster run exactly (jitter-free cost model so replica
+    epochs actually collapse; the shared rng forbids epochs under
+    noise, where the composed engine degenerates to the object path)."""
+    from repro.cluster.simulator import ClusterConfig, ClusterSimulator
+
+    def run(backend, **kw):
+        plan = WorkloadGenerator(GeneratorConfig(
+            total_requests=120, calibration_requests=12, seed=5)).plan()
+        cfg = ClusterConfig(n_replicas=3, step_engine=True,
+                            batch_capacity=4, backend=backend, seed=5,
+                            **kw)
+        sim = ClusterSimulator(plan, cfg, cost_model=ZERO_JIT)
+        return sim, sim.run()
+
+    for kw in ({}, dict(prefix_cache=True, continuous_joins=True,
+                        chunk_prefill_tokens=64),
+               dict(fail_events=((5.0, 1),), repair_time=10.0)):
+        _, mo = run("object", **kw)
+        sim_v, mv = run("vector", **kw)
+        assert all(isinstance(rep.sim, StepVectorizedWorkerSimulator)
+                   for rep in sim_v.replicas)
+        assert sum(rep.sim.n_epochs for rep in sim_v.replicas) > 0
+        do, dv = mo.as_dict(), mv.as_dict()
+        assert do.pop("backend") == "object"
+        assert dv.pop("backend") == "vector"
+        assert _eq(do, dv), kw
+
+
+# ---------------------------------------------------------------------
+# backend selection: no silent fallback
+# ---------------------------------------------------------------------
+
+def test_worker_simulator_refuses_vector_backend_directly():
+    """Constructing the *object* engine with backend='vector' must
+    raise, not silently run the slow path — CI greps for this guard."""
+    sched = DriftScheduler(policy=make_policy("fifo"))
+    with pytest.raises(ValueError, match="vector"):
+        WorkerSimulator(sched, plan=_plan(),
+                        config=SimConfig(step_engine=True,
+                                         backend="vector"))
+
+
+def test_unknown_backend_rejected():
+    sched = DriftScheduler(policy=make_policy("fifo"))
+    with pytest.raises(ValueError, match="backend"):
+        WorkerSimulator(sched, plan=_plan(),
+                        config=SimConfig(backend="numpy"))
+
+
+def test_factory_selects_backend_classes():
+    cfg = SimConfig(step_engine=True, backend="vector", seed=SEED)
+    # standalone (no sink): the flat-array engine
+    sched = DriftScheduler(policy=make_policy("fifo"))
+    sim = make_worker_simulator(sched, plan=_plan(), config=cfg)
+    assert type(sim) is VectorWorkerSimulator
+    # sink-driven: the composed subclass (still a WorkerSimulator)
+    sched2 = DriftScheduler(policy=make_policy("fifo"))
+    sim2 = make_worker_simulator(sched2, plan=None, config=cfg,
+                                 sink=lambda t, k, p: None)
+    assert type(sim2) is StepVectorizedWorkerSimulator
+    assert isinstance(sim2, WorkerSimulator)
+    # object stays object
+    sched3 = DriftScheduler(policy=make_policy("fifo"))
+    sim3 = make_worker_simulator(
+        sched3, plan=_plan(), config=SimConfig(step_engine=True))
+    assert type(sim3) is WorkerSimulator
+
+
+def test_cluster_vector_backend_rejects_pd():
+    from repro.cluster.simulator import ClusterConfig, ClusterSimulator
+    plan = WorkloadGenerator(GeneratorConfig(
+        total_requests=24, calibration_requests=4, seed=3)).plan()
+    with pytest.raises(ValueError, match="pd_disaggregated"):
+        ClusterSimulator(plan, ClusterConfig(
+            n_replicas=3, step_engine=True, backend="vector",
+            routing="pd_disaggregated"))
+
+
+# ---------------------------------------------------------------------
+# conservation: fixed-seed fallback for the hypothesis property
+# (tests/test_properties.py carries the randomized-driver version;
+# hypothesis is a CI-only dependency, so this fallback must always run)
+# ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,policy,extra", [
+    (1, "fifo", dict(prefix_cache=True, continuous_joins=True,
+                     chunk_prefill_tokens=48)),
+    (2, "sjf", dict(fail_times=(4.0, 9.0), repair_time=2.0)),
+    (3, "weighted", dict(n_workers=1, batch_capacity=8,
+                         prefix_cache=True)),
+])
+def test_vector_core_conservation_fixed_seeds(seed, policy, extra):
+    """Conservation laws of the flat-array core, checked at every step
+    boundary of a full run: prefix-pool pages are partitioned between
+    the free list and the radix tree, and every request is in exactly
+    one lifecycle bucket (queued + running + done == arrived)."""
+    gen = WorkloadGenerator(GeneratorConfig(
+        total_requests=64, calibration_requests=8,
+        shared_prefix_tokens=96, prefix_groups_per_tenant=2, seed=seed))
+    vplan = VectorPlan.from_plan(gen.plan())
+    cfg = SimConfig(**{**BASE, "seed": seed, **extra})
+    vec = VectorWorkerSimulator(vplan, cfg, L4_QWEN_1_8B, policy=policy)
+
+    checks = {"n": 0}
+    inner = vec._finish_step
+
+    def checked(wid, gen_, now):
+        done = inner(wid, gen_, now)
+        st = vec.state
+        if vec.prefix_tree is not None:
+            alloc = vec.prefix_tree.allocator
+            assert (alloc.free_pages + vec.prefix_tree.total_pages()
+                    == alloc.n_pages)
+        n = len(st.req_id)
+        arrived = n - int((st.state[:n] == S_CREATED).sum())
+        # queued + dispatched + executing + completed — every arrived
+        # request sits in exactly one lifecycle bucket (S_FAILED is
+        # transient: a preempted request is immediately re-queued)
+        in_buckets = int((st.state[:n] > S_CREATED).sum()
+                         - (st.state[:n] == 5).sum())
+        assert in_buckets == arrived
+        checks["n"] += 1
+        return done
+
+    vec._finish_step = checked
+    vec.run()
+    assert checks["n"] > 0
+    assert int((vec.state.state == S_COMPLETED).sum()) == len(vplan)
