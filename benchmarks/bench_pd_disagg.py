@@ -16,13 +16,28 @@ transfer; the gap narrows as the pool grows. Work stealing is a
 drain-phase mechanism: it fires on imbalance (failure/repair, uneven
 tails), so the sweep also includes a decode-replica failure scenario
 where stolen work is the recovery path.
+
+The *engine arm* reruns the headline comparison over real JAX
+``ServingEngine`` replicas via ``EngineClusterDriver``: a prefill
+engine hands each finished prompt's actual KV pages to a decode
+engine (fused chunked-prefill + batched paged-decode kernels under
+the hood), vs the same engines unified under least_loaded. Times are
+in lockstep engine iterations (``dt`` steps), so only intra-arm
+comparisons are meaningful.
+
+Smoke mode: set ``BENCH_SMOKE=1`` to shrink the sweep to a single
+seed / replica count and a smaller engine workload (used by the CI
+benchmark smoke step).
 """
 
 from __future__ import annotations
 
+import os
+
 from repro.cluster import ClusterConfig, ClusterSimulator
 from repro.serving.cost_model import L4_MAX_DRIVEN, L4_QWEN_1_8B
-from repro.workload.generator import WorkloadGenerator, cluster_stress_config
+from repro.workload.generator import (GeneratorConfig, WorkloadGenerator,
+                                      cluster_stress_config)
 
 from .common import fmt_table, mean, save_json
 
@@ -36,6 +51,25 @@ REGIMES = {"batch_walk": L4_MAX_DRIVEN, "sum_dominated": L4_QWEN_1_8B}
 UNIFIED_ROUTING = "least_loaded"
 FAIL_EVENTS = ((20.0, 2),)           # decode-replica failure scenario
 REPAIR_TIME = 25.0
+
+# --- engine arm: the same question over real ServingEngine replicas ---
+ENGINE_REPLICAS = 3                  # P/D split: 1 prefill + 2 decode
+ENGINE_REQUESTS = 48                 # 24 under BENCH_SMOKE
+ENGINE_SLOTS = 2                     # scarce slots: decode clogs unified
+ENGINE_CHUNK_TOKENS = 16
+
+_SMOKE = os.environ.get("BENCH_SMOKE", "").strip().lower() \
+    not in ("", "0", "false", "no")
+
+
+def _protocol() -> dict:
+    """Effective sweep constants (shrunk under BENCH_SMOKE)."""
+    if _SMOKE:
+        return {"seeds": (1,), "replica_counts": (4,),
+                "regimes": {"batch_walk": L4_MAX_DRIVEN},
+                "engine_total": 24}
+    return {"seeds": SEEDS, "replica_counts": REPLICA_COUNTS,
+            "regimes": REGIMES, "engine_total": ENGINE_REQUESTS}
 
 
 def _mode_config(mode: str, n: int, seed: int, **extra) -> ClusterConfig:
@@ -55,11 +89,11 @@ def _run(mode: str, n: int, seed: int, cost_model, **extra):
     return sim, sim.run()
 
 
-def _collect(mode: str, n: int, cost_model, **extra) -> dict:
+def _collect(mode: str, n: int, cost_model, seeds, **extra) -> dict:
     acc = {k: [] for k in ("ttft_p50", "ttft_p99", "decode_p50",
                            "decode_p99", "e2e_p50", "e2e_p99",
                            "n_handoffs", "n_stolen", "n_completed")}
-    for seed in SEEDS:
+    for seed in seeds:
         _, m = _run(mode, n, seed, cost_model, **extra)
         acc["ttft_p50"].append(m.ttft.p50)
         acc["ttft_p99"].append(m.ttft.p99)
@@ -73,18 +107,81 @@ def _collect(mode: str, n: int, cost_model, **extra) -> dict:
     return {k: mean(v) for k, v in acc.items()}
 
 
+def _run_engine_arm(proto: dict) -> dict:
+    """pd_disaggregated vs unified least_loaded over real JAX engines:
+    ``ENGINE_REPLICAS`` paged ``ServingEngine`` replicas driven through
+    ``EngineClusterDriver``, with the P/D arm moving each prompt's
+    actual KV pages from the prefill engine to a decode engine.
+    Arrivals outpace the decode drain (one request per lockstep
+    iteration against decode targets of ~24 steps), so unified slots
+    clog with decode and late prompts queue behind them; the prefill
+    engine recycles its slots at first token. TTFT is the
+    engine-stamped ``prefill_end`` in step units."""
+    import jax
+
+    from repro.cluster.driver import make_engine_cluster
+    from repro.configs import smoke_config
+    from repro.models.registry import get_api
+    from repro.serving.engine import EngineConfig
+    from repro.serving.metrics import percentile
+
+    cfg = smoke_config("smollm-135m")
+    params = get_api(cfg).init(cfg, jax.random.PRNGKey(0))
+    seed = proto["seeds"][0]
+    out = {}
+    for mode in ("unified", "pd_disaggregated"):
+        driver = make_engine_cluster(
+            cfg, params, ENGINE_REPLICAS,
+            routing=UNIFIED_ROUTING if mode == "unified"
+            else "pd_disaggregated",
+            n_prefill_replicas=1 if mode == "pd_disaggregated" else None,
+            engine_config=EngineConfig(
+                n_slots=ENGINE_SLOTS, max_len=96, prompt_buckets=(64,),
+                paged=True, page_size=8,
+                chunk_prefill_tokens=ENGINE_CHUNK_TOKENS))
+        gen = WorkloadGenerator(GeneratorConfig(
+            total_requests=proto["engine_total"],
+            calibration_requests=proto["engine_total"],
+            max_tokens=24, seed=seed))
+        now = 0.0
+        for _, r in gen.plan(seed=seed).calibration:
+            r.arrival_time = now
+            driver.submit(r, now)
+            driver.step(now)
+            now += 1.0
+        m = driver.run_until_drained(max_steps=20_000)
+        done = [r for rep in driver.replicas for r in rep.sched.completed]
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        e2es = [r.e2e_latency for r in done if r.e2e_latency is not None]
+        out[mode] = {
+            "n_completed": m.n_completed,
+            "n_handoffs": driver.n_handoffs,
+            "ttft_p50_steps": percentile(ttfts, 50),
+            "ttft_p99_steps": percentile(ttfts, 99),
+            "e2e_p99_steps": percentile(e2es, 99),
+        }
+    pd, uni = out["pd_disaggregated"], out["unified"]
+    out["pd_beats_unified_ttft_p50"] = (
+        pd["ttft_p50_steps"] < uni["ttft_p50_steps"])
+    out["ttft_p50_reduction_pct"] = 100 * (
+        1 - pd["ttft_p50_steps"] / max(uni["ttft_p50_steps"], 1e-9))
+    return out
+
+
 def run() -> dict:
-    out = {"sweep": {}}
+    proto = _protocol()
+    out = {"smoke": _SMOKE, "sweep": {}}
     # 1) mode x replica-count sweep, both regimes
-    for regime, cost in REGIMES.items():
+    for regime, cost in proto["regimes"].items():
         out["sweep"][regime] = {}
-        for n in REPLICA_COUNTS:
+        for n in proto["replica_counts"]:
             out["sweep"][regime][n] = {
-                mode: _collect(mode, n, cost) for mode in MODES}
+                mode: _collect(mode, n, cost, proto["seeds"])
+                for mode in MODES}
 
     # headline: TTFT reduction from disaggregation at 4 replicas
     out["ttft_reduction_at_4"] = {}
-    for regime in REGIMES:
+    for regime in proto["regimes"]:
         uni = out["sweep"][regime][4]["unified"]
         pd = out["sweep"][regime][4]["pd_disaggregated"]
         out["ttft_reduction_at_4"][regime] = {
@@ -98,7 +195,7 @@ def run() -> dict:
     out["failure_drain"] = {}
     for mode in ("pd_disaggregated", "pd_steal"):
         p99s, stolen, rerouted, completed = [], [], [], []
-        for seed in SEEDS:
+        for seed in proto["seeds"]:
             _, m = _run(mode, 4, seed, L4_MAX_DRIVEN,
                         fail_events=FAIL_EVENTS, repair_time=REPAIR_TIME)
             p99s.append(m.run.e2e.p99)
@@ -108,6 +205,9 @@ def run() -> dict:
         out["failure_drain"][mode] = {
             "p99": mean(p99s), "n_stolen": mean(stolen),
             "n_rerouted": mean(rerouted), "n_completed": mean(completed)}
+
+    # 3) engine arm: the headline comparison on real ServingEngines
+    out["engine"] = _run_engine_arm(proto)
 
     save_json("pd_disagg", out)
     return out
@@ -143,4 +243,12 @@ def report(out: dict) -> str:
           f"{f['pd_disaggregated']['n_rerouted']:.0f} rerouted) vs "
           f"{f['pd_steal']['p99']:.1f}s with stealing "
           f"({f['pd_steal']['n_stolen']:.0f} stolen)")
+    e = out["engine"]
+    pd, uni = e["pd_disaggregated"], e["unified"]
+    s += ("\nengine arm (real ServingEngines, step units): pd TTFT P50 "
+          f"{pd['ttft_p50_steps']:.1f} vs unified "
+          f"{uni['ttft_p50_steps']:.1f} "
+          f"(-{e['ttft_p50_reduction_pct']:.0f}%, "
+          f"{int(pd['n_handoffs'])} KV handoffs, "
+          f"pd_beats_unified_ttft_p50={e['pd_beats_unified_ttft_p50']})")
     return s

@@ -1,11 +1,25 @@
 """Pallas TPU kernels for the serving hot spots (DESIGN.md §5):
-flash_attention (prefill/train), paged_decode_attention (decode against
-the paged KV pool), ssd_scan (Mamba-2 state-space duality). ops.py is
-the public dispatch layer; ref.py holds the pure-jnp oracles."""
+flash_attention (prefill/train), chunked_prefill_attention (prefill
+slabs against the paged KV pool), paged_decode_attention /
+batched_paged_decode_attention (decode against the paged KV pool),
+ssd_scan (Mamba-2 state-space duality). ops.py is the public dispatch
+layer; ref.py holds the pure-jnp oracles."""
 
 from . import ops, ref
+from .chunked_prefill import chunked_prefill_attention
 from .flash_attention import flash_attention
-from .paged_attention import paged_decode_attention
+from .paged_attention import (
+    batched_paged_decode_attention,
+    paged_decode_attention,
+)
 from .ssd_scan import ssd_scan
 
-__all__ = ["ops", "ref", "flash_attention", "paged_decode_attention", "ssd_scan"]
+__all__ = [
+    "ops",
+    "ref",
+    "batched_paged_decode_attention",
+    "chunked_prefill_attention",
+    "flash_attention",
+    "paged_decode_attention",
+    "ssd_scan",
+]

@@ -20,8 +20,12 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .chunked_prefill import chunked_prefill_attention as _chunked_prefill_pallas
 from .flash_attention import flash_attention as _flash_pallas
-from .paged_attention import paged_decode_attention as _paged_pallas
+from .paged_attention import (
+    batched_paged_decode_attention as _batched_paged_pallas,
+    paged_decode_attention as _paged_pallas,
+)
 from .ssd_scan import ssd_scan as _ssd_pallas
 
 Impl = str  # 'auto' | 'pallas' | 'pallas_interpret' | 'reference'
@@ -102,6 +106,69 @@ def paged_decode_attention(
         )
     return ref.paged_decode_attention_ref(
         q, k_pages, v_pages, page_table, seq_lens, logit_softcap=logit_softcap
+    )
+
+
+def batched_paged_decode_attention(
+    q: jax.Array,            # [B, H, D]
+    k_pages: jax.Array,      # [n_pages, page_size, Hk, D]
+    v_pages: jax.Array,      # [n_pages, page_size, Hk, D]
+    page_table: jax.Array,   # [B, pages_per_seq] int32
+    seq_lens: jax.Array,     # [B] int32 tokens resident BEFORE this step
+    k_new: jax.Array,        # [B, Hk, D] this iteration's key (not in pool)
+    v_new: jax.Array,        # [B, Hk, D]
+    *,
+    max_pages: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+    impl: Impl = "auto",
+) -> jax.Array:
+    """One engine iteration's whole decode set in a single call: paged
+    decode with the current token's K/V fused as a virtual trailing page
+    (see ``paged_attention.batched_paged_decode_attention``)."""
+    # the fused new-token K/V must see pool dtype so results are
+    # bit-consistent with scatter-then-read on every impl
+    k_new = k_new.astype(k_pages.dtype)
+    v_new = v_new.astype(v_pages.dtype)
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "reference"
+    if impl in ("pallas", "pallas_interpret"):
+        return _batched_paged_pallas(
+            q, k_pages, v_pages, page_table, seq_lens, k_new, v_new,
+            max_pages=max_pages, logit_softcap=logit_softcap,
+            interpret=(impl == "pallas_interpret"),
+        )
+    del max_pages  # a DMA-trim hint; the gather oracle reads every page
+    return ref.batched_paged_decode_attention_ref(
+        q, k_pages, v_pages, page_table, seq_lens, k_new, v_new,
+        logit_softcap=logit_softcap,
+    )
+
+
+def chunked_prefill_attention(
+    q: jax.Array,            # [B, chunk, H, D] query slab
+    k_pages: jax.Array,      # [n_pages, page_size, Hk, D]
+    v_pages: jax.Array,      # [n_pages, page_size, Hk, D]
+    page_table: jax.Array,   # [B, pages_per_seq] int32
+    q_offsets: jax.Array,    # [B] int32 absolute position of q[:, 0]
+    kv_lens: jax.Array,      # [B] int32 resident tokens incl. this slab
+    *,
+    logit_softcap: Optional[float] = None,
+    impl: Impl = "auto",
+) -> jax.Array:
+    """Fused chunked-prefill attention over the paged KV pool: one
+    prefill slab vs every resident page (cached prefix + prior chunks +
+    itself), query-offset causal masked."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "reference"
+    if impl in ("pallas", "pallas_interpret"):
+        return _chunked_prefill_pallas(
+            q, k_pages, v_pages, page_table, q_offsets, kv_lens,
+            logit_softcap=logit_softcap,
+            interpret=(impl == "pallas_interpret"),
+        )
+    return ref.chunked_prefill_attention_ref(
+        q, k_pages, v_pages, page_table, q_offsets, kv_lens,
+        logit_softcap=logit_softcap,
     )
 
 

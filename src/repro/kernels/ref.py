@@ -199,6 +199,75 @@ def paged_decode_attention_ref(
     )
 
 
+def batched_paged_decode_attention_ref(
+    q: jax.Array,            # [B, H, D]
+    k_pages: jax.Array,      # [n_pages, page_size, Hk, D]
+    v_pages: jax.Array,      # [n_pages, page_size, Hk, D]
+    page_table: jax.Array,   # [B, pages_per_seq] int32
+    seq_lens: jax.Array,     # [B] int32 tokens resident BEFORE this step
+    k_new: jax.Array,        # [B, Hk, D]
+    v_new: jax.Array,        # [B, Hk, D]
+    *,
+    logit_softcap: Optional[float] = None,
+) -> jax.Array:
+    """Oracle for the batched decode kernel: scatter the new token into
+    the gathered contiguous view at position ``seq_lens[b]``, then attend
+    over ``seq_lens + 1`` tokens."""
+    B, H, D = q.shape
+    n_pages, page_size, Hk, _ = k_pages.shape
+    pages_per_seq = page_table.shape[1]
+    S = pages_per_seq * page_size
+    k = k_pages[page_table].reshape(B, S, Hk, D)
+    v = v_pages[page_table].reshape(B, S, Hk, D)
+    rows = jnp.arange(B)
+    k = k.at[rows, seq_lens].set(k_new.astype(k.dtype))
+    v = v.at[rows, seq_lens].set(v_new.astype(v.dtype))
+    return decode_attention_ref(
+        q, k, v, seq_lens + 1, logit_softcap=logit_softcap
+    )
+
+
+def chunked_prefill_attention_ref(
+    q: jax.Array,            # [B, chunk, H, D] query slab
+    k_pages: jax.Array,      # [n_pages, page_size, Hk, D]
+    v_pages: jax.Array,      # [n_pages, page_size, Hk, D]
+    page_table: jax.Array,   # [B, pages_per_seq] int32
+    q_offsets: jax.Array,    # [B] int32 absolute position of q[:, 0]
+    kv_lens: jax.Array,      # [B] int32 resident tokens incl. this slab
+    *,
+    logit_softcap: Optional[float] = None,
+) -> jax.Array:
+    """Oracle for the fused chunked-prefill kernel: gather each
+    sequence's pages into a contiguous view and apply query-offset causal
+    masking at absolute positions (query row i sits at position
+    ``q_offsets[b] + i``; rows past ``kv_lens`` come back as zeros)."""
+    B, chunk, H, D = q.shape
+    n_pages, page_size, Hk, _ = k_pages.shape
+    pages_per_seq = page_table.shape[1]
+    S = pages_per_seq * page_size
+    group = H // Hk
+    k = k_pages[page_table].reshape(B, S, Hk, D).astype(jnp.float32)
+    v = v_pages[page_table].reshape(B, S, Hk, D).astype(jnp.float32)
+    qf = (q.astype(jnp.float32) * (D ** -0.5)).reshape(B, chunk, Hk, group, D)
+    s = jnp.einsum("bqhgd,bshd->bhgqs", qf, k)            # [B,Hk,g,chunk,S]
+    if logit_softcap is not None:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    q_pos = q_offsets[:, None] + jnp.arange(chunk)[None, :]      # [B, chunk]
+    k_pos = jnp.arange(S)[None, :]                               # [1, S]
+    mask = (k_pos[:, None, :] <= q_pos[:, :, None])              # causal
+    mask &= k_pos[:, None, :] < kv_lens[:, None, None]
+    mask &= q_pos[:, :, None] < kv_lens[:, None, None]
+    s = jnp.where(mask[:, None, None], s, -jnp.inf)
+    # safe softmax: fully-masked rows (q_pos >= kv_len) -> zeros
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.where(jnp.isfinite(s), jnp.exp(s - jnp.where(
+        jnp.isfinite(m), m, 0.0)), 0.0)
+    l = e.sum(axis=-1, keepdims=True)
+    p = e / jnp.where(l == 0.0, 1.0, l)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", p, v)
+    return out.reshape(B, chunk, H, D).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Mamba2 SSD (state-space duality) oracles
 # ---------------------------------------------------------------------------

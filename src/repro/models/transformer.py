@@ -202,11 +202,16 @@ def decode_step_paged(cfg: ModelConfig, params: Dict, pool: Dict,
                       tokens: jax.Array,        # [B] int32 current token
                       page_table: jax.Array,    # [B, pages_per_seq] int32
                       seq_lens: jax.Array,      # [B] tokens BEFORE this step
+                      *,
+                      max_pages: Optional[int] = None,
                       ) -> Tuple[jax.Array, Dict]:
     """One decode iteration against the vLLM-style paged KV pool
-    (serving/kv_cache.py). The new token's K/V is scattered into the
-    page owning slot ``seq_lens[b]``; attention reads through the page
-    table (Pallas paged kernel on TPU, gather reference elsewhere).
+    (serving/kv_cache.py). The whole decode set goes through one batched
+    paged-attention call per layer: the new token's K/V rides along as a
+    fused kernel operand (so attention never reads a page aliased with a
+    same-step scatter) and is scattered into the page owning slot
+    ``seq_lens[b]`` only for the pool carry. ``max_pages`` statically
+    trims the kernel's page grid to the deepest live sequence.
 
     pool: {"k": [L, n_pages, page, Hk, hd], "v": ...}.
     Returns (logits, new_pool)."""
@@ -228,11 +233,11 @@ def decode_step_paged(cfg: ModelConfig, params: Dict, pool: Dict,
         if cfg.pos == "rope":
             q = nn.apply_rope(q, seq_lens, cfg.rope_theta)
             k_new = nn.apply_rope(k_new, seq_lens, cfg.rope_theta)
+        attn = ops.batched_paged_decode_attention(
+            q, kp, vp, page_table, seq_lens, k_new, v_new,
+            max_pages=max_pages, logit_softcap=cfg.logit_softcap)
         kp = kp.at[phys, offset].set(k_new.astype(kp.dtype))
         vp = vp.at[phys, offset].set(v_new.astype(vp.dtype))
-        attn = ops.paged_decode_attention(
-            q, kp, vp, page_table, seq_lens + 1,
-            logit_softcap=cfg.logit_softcap)
         h = h + jnp.einsum("bhk,hkd->bd", attn, lp["attn"]["wo"])
         mlp_in = nn.apply_norm(cfg, lp["ln2"], h)
         if cfg.family == "moe":
@@ -244,6 +249,60 @@ def decode_step_paged(cfg: ModelConfig, params: Dict, pool: Dict,
     h, (ks, vs) = nn.scan_layers(
         scan_body, x, (params["layers"], pool["k"], pool["v"]))
     h = nn.apply_norm(cfg, params["final_norm"], h)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = nn.unembed(cfg, head, h)
+    return logits, {"k": ks, "v": vs}
+
+
+def prefill_chunk_paged(cfg: ModelConfig, params: Dict, pool: Dict,
+                        tokens: jax.Array,       # [B, C] chunk token ids
+                        page_table: jax.Array,   # [B, pages_per_seq] int32
+                        q_offset: jax.Array,     # [B] int32 abs pos of col 0
+                        ) -> Tuple[jax.Array, Dict]:
+    """One prefill chunk against the paged pool, via the fused
+    chunked-prefill kernel. Per layer: project the slab's Q/K/V at
+    absolute positions ``[q_offset, q_offset + C)``, scatter K/V into the
+    pages owning those slots, then attend the slab against *everything
+    resident* — prefix-tree pages and the chunks scattered by earlier
+    calls — with query-offset causal masking. Resuming from a cached
+    prefix is just starting at ``q_offset > 0``.
+
+    pool: {"k": [L, n_pages, page, Hk, hd], "v": ...}.
+    Returns (last-position logits [B, V], new_pool)."""
+    from ..kernels import ops
+    B, C = tokens.shape
+    page_size = pool["k"].shape[2]
+    x = nn.embed(cfg, params["embed"], tokens)           # [B, C, d]
+    positions = q_offset[:, None] + jnp.arange(C)[None]  # [B, C]
+    phys = jnp.take_along_axis(page_table, positions // page_size, axis=1)
+    offset = positions % page_size
+    kv_lens = q_offset + C
+
+    def scan_body(h, xs):
+        lp, kp, vp = xs                                # [n_pages, page, Hk, hd]
+        h = constrain(h, "batch", None, "residual")
+        attn_in = nn.apply_norm(cfg, lp["ln1"], h)
+        q, k, v = nn.qkv_project(lp["attn"], attn_in)  # [B, C, H/Hk, hd]
+        if cfg.pos == "rope":
+            q = nn.apply_rope(q, positions, cfg.rope_theta)
+            k = nn.apply_rope(k, positions, cfg.rope_theta)
+        kp = kp.at[phys, offset].set(k.astype(kp.dtype))
+        vp = vp.at[phys, offset].set(v.astype(vp.dtype))
+        attn = ops.chunked_prefill_attention(
+            q, kp, vp, page_table, q_offset, kv_lens,
+            logit_softcap=cfg.logit_softcap)
+        h = h + jnp.einsum("blhk,hkd->bld", attn, lp["attn"]["wo"])
+        mlp_in = nn.apply_norm(cfg, lp["ln2"], h)
+        if cfg.family == "moe":
+            out, _ = nn.moe_block(cfg, lp["moe"], mlp_in)
+            h = h + out
+        else:
+            h = h + nn.mlp_block(cfg, lp["mlp"], mlp_in)
+        return h, (kp, vp)
+
+    h, (ks, vs) = nn.scan_layers(
+        scan_body, x, (params["layers"], pool["k"], pool["v"]))
+    h = nn.apply_norm(cfg, params["final_norm"], h[:, -1])
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
     logits = nn.unembed(cfg, head, h)
     return logits, {"k": ks, "v": vs}

@@ -31,9 +31,15 @@ Iteration-level execution (mirrors the simulator's step engine,
   suite locks bit-for-bit against the pre-chunking engine.
   Chunk accounting runs in *request* prompt tokens (clipped to the
   bucket): the XLA padding a bucket adds is a static-shape artifact,
-  not billable workload. The device-side prefill for the uncached
-  remainder executes once, at the final chunk's iteration — the
-  smoke-scale projection of a fused chunked-prefill kernel.
+  not billable workload. On the paged transformer path every chunk
+  *executes on device* the iteration its budget is consumed, through
+  the fused chunked-prefill kernel
+  (``kernels/chunked_prefill.py``): scatter the slab's K/V into the
+  sequence's pages, then attend it against everything resident —
+  prefix-tree pages and earlier chunks — under query-offset causal
+  masking. The final chunk covers the bucket's padding tail and its
+  last-position logits produce the first token. (The vlm family and
+  the slot-ring cache keep the legacy single-shot bucket prefill.)
 * **Shared-prefix reuse** (``EngineConfig.prefix_cache``, paged mode
   only): ``kv_cache.PrefixTree`` runs over the engine's own page pool.
   A joining request whose prompt starts with a resident shared prefix
@@ -123,6 +129,7 @@ class SlotState:
     pending_prefill: bool = False  # device prefill not yet executed
     batch: Optional[Dict] = None   # tokenized prompt awaiting prefill
     bucket: int = 0
+    prefill_pos: int = 0           # bucket position device prefill reached
 
 
 class ServingEngine:
@@ -158,7 +165,17 @@ class ServingEngine:
         self.busy_steps = 0
         self._rng = jax.random.PRNGKey(0)
         self._prefill_cache = {}
+        self._chunk_cache = {}             # jitted chunk fns, keyed by length
         self._join_order: List[int] = []   # slot ids, chunk-budget order
+        # --- per-chunk device execution counters (paged prefill path) ---
+        self.n_prefill_launches = 0
+        self.prefill_chunk_log: List[Tuple[int, int]] = []  # (slot, length)
+        # --- P/D disaggregation plumbing (cluster driver) ---
+        # called as hook(slot, req, now) when a slot's prefill completes;
+        # returning True means the driver took the request over (KV
+        # extracted for transfer) and the engine must not decode it
+        self.handoff_hook = None
+        self._pending_injections: Dict = {}   # req_id -> KV payload
         # --- prefix-cache counters (mirror WorkerSimulator's) ---
         self.prefix_tree = None
         self.n_prefix_hits = 0
@@ -188,7 +205,8 @@ class ServingEngine:
                                     if self.ecfg.prefix_cache else None))
             self.pool = PagedPool.create(cfg, self.alloc.n_pages + 1,
                                          self.ecfg.page_size)
-            self._decode_paged = jax.jit(self._decode_paged_fn)
+            self._decode_paged = jax.jit(self._decode_paged_fn,
+                                         static_argnames=("max_pages",))
         else:
             self.cache = self.api.init_cache(cfg, n, S)
             self._decode = jax.jit(self._decode_fn)
@@ -201,12 +219,24 @@ class ServingEngine:
         return toks, cache
 
     def _decode_paged_fn(self, params, pool, tokens, page_table,
-                         seq_lens, rng):
+                         seq_lens, rng, *, max_pages=None):
         from ..models import transformer
         logits, pool = transformer.decode_step_paged(
-            self.cfg, params, pool, tokens, page_table, seq_lens)
+            self.cfg, params, pool, tokens, page_table, seq_lens,
+            max_pages=max_pages)
         toks = sample_logits(logits, rng, self.ecfg.temperature)
         return toks, pool
+
+    def _chunk_fn_for(self, chunk_len: int):
+        """Jitted fused-chunked-prefill step, cached per chunk length
+        (the engine's analogue of per-bucket prefill jitting)."""
+        if chunk_len not in self._chunk_cache:
+            def fn(params, pool, tokens, page_table, q_offset):
+                from ..models import transformer
+                return transformer.prefill_chunk_paged(
+                    self.cfg, params, pool, tokens, page_table, q_offset)
+            self._chunk_cache[chunk_len] = jax.jit(fn)
+        return self._chunk_cache[chunk_len]
 
     def _prefill_fn_for(self, bucket: int):
         if bucket not in self._prefill_cache:
@@ -364,15 +394,23 @@ class ServingEngine:
         st.pending_prefill = True
         st.batch = batch
         st.bucket = bucket
+        st.prefill_pos = cached
         self._join_order.append(slot)
         req.state = RequestState.EXECUTING
         req.exec_start = now
 
+    @property
+    def _chunked_device_prefill(self) -> bool:
+        """Paged transformer prefill goes through the fused
+        chunked-prefill kernel per chunk. The vlm family keeps the
+        legacy single-shot path: its patch-embedding prefix-LM prefill
+        has no chunked counterpart."""
+        return self.ecfg.paged and self.cfg.family != "vlm"
+
     def _run_prefill(self, slot: int, now: float) -> None:
-        """The slot's last prompt chunk landed: execute the device
-        prefill for the uncached remainder, donate shareable full pages
-        to the prefix tree, and emit the first token (the honest TTFT
-        anchor)."""
+        """Legacy single-shot device prefill (slot-ring cache, and the
+        vlm-paged path): the slot's last prompt chunk landed, execute
+        the whole bucket at once and emit the first token."""
         st = self.slots[slot]
         self._rng, sub = jax.random.split(self._rng)
         if self.ecfg.paged:
@@ -393,8 +431,57 @@ class ServingEngine:
             tok, cache_1 = self._prefill_fn_for(st.bucket)(
                 self.params, st.batch, sub)
             self._insert_cache(slot, cache_1)
+        self._emit_first_token(slot, int(tok[0]), now)
+
+    def _advance_prefill(self, slot: int, take: int, now: float) -> None:
+        """Execute this iteration's device chunk for a paged slot
+        through the fused kernel. The ``take`` prompt tokens the budget
+        loop just consumed map 1:1 onto bucket positions
+        ``[prefill_pos, prefill_pos + take)``; the final chunk extends
+        through the bucket's padding tail (a static-shape artifact, not
+        billable workload) so its last position yields the first-token
+        logits. The prefill-completing iteration donates shareable
+        pages and emits the first token."""
+        st = self.slots[slot]
+        final = st.prefill_remaining <= 0
+        start, end = st.prefill_pos, st.prefill_pos + take
+        if final:
+            end = st.bucket
+            if end <= start:
+                # fully-cached prompt: re-run the last bucket position
+                # (recomputing KV already resident in the cached pages)
+                # purely for the first-token logits
+                start = end - 1
+        if end <= start:
+            return                       # budget exhausted, mid-prompt
+        chunk_len = end - start
+        pt = jnp.asarray(self.ledger.table_array(
+            [slot], self.alloc.pages_per_seq))
+        logits, new_pool = self._chunk_fn_for(chunk_len)(
+            self.params, {"k": self.pool.k, "v": self.pool.v},
+            st.batch["tokens"][:, start:end], pt,
+            jnp.asarray([start], jnp.int32))
+        from .kv_cache import PagedPool
+        self.pool = PagedPool(k=new_pool["k"], v=new_pool["v"],
+                              page_size=self.ecfg.page_size)
+        self.n_prefill_launches += 1
+        self.prefill_chunk_log.append((slot, chunk_len))
+        st.prefill_pos = end
+        if final:
+            self._rng, sub = jax.random.split(self._rng)
+            if self.prefix_tree is not None:
+                self.ledger.donate(slot, now)
+            tok = sample_logits(logits, sub, self.ecfg.temperature)
+            self._emit_first_token(slot, int(tok[0]), now)
+
+    def _emit_first_token(self, slot: int, tok: int, now: float) -> None:
+        """Prefill-completion bookkeeping shared by the single-shot and
+        per-chunk paths: first token, honest TTFT anchor, and the P/D
+        handoff hook (a hooked request leaves for a decode replica
+        instead of joining this engine's decode set)."""
+        st = self.slots[slot]
         st.generated = 1                       # prefill emitted one token
-        st.last_token = int(tok[0])
+        st.last_token = tok
         st.pending_prefill = False
         st.batch = None
         st.req.prefill_end = now               # first token exists now
@@ -403,6 +490,107 @@ class ServingEngine:
                             rid=self.trace_rid,
                             tenant=st.req.tenant.label,
                             ttft=now - st.req.arrival_time)
+        if self.handoff_hook is not None \
+                and self.handoff_hook(slot, st.req, now):
+            self._release_slot(slot)
+
+    # --- P/D disaggregation: KV extraction / injection --------------------
+    def _release_slot(self, slot: int) -> None:
+        """Free a slot without completing its request (the request
+        lives on elsewhere — P/D handoff or failure reroute): no
+        ``sched.complete``, so no drift feedback fires here."""
+        st = self.slots[slot]
+        if self.ecfg.paged:
+            self.ledger.free(slot)
+        self._join_order.remove(slot)
+        st.req = None
+        st.generated = 0
+        st.target = 0
+        st.prefill_remaining = 0
+        st.cached_tokens = 0
+        st.pending_prefill = False
+        st.batch = None
+
+    def extract_sequence(self, slot: int) -> Dict:
+        """Snapshot a prefilled slot's state for a P/D handoff: the
+        sequence's page *contents* gathered off the pool (the real KV
+        page movement — prefix-tree pages are copied too, the receiver
+        gets private pages) plus the decode-resume scalars."""
+        assert self.ecfg.paged, "KV extraction requires the paged pool"
+        st = self.slots[slot]
+        pages = jnp.asarray(self.ledger.table(slot), jnp.int32)
+        return {
+            "k": np.asarray(self.pool.k[:, pages]),
+            "v": np.asarray(self.pool.v[:, pages]),
+            "seq_len": st.bucket,          # resident tokens (whole bucket)
+            "bucket": st.bucket,
+            "prompt_len": st.prompt_len,
+            "last_token": st.last_token,
+            "generated": st.generated,
+            "target": st.target,
+        }
+
+    def accept_handoff(self, req: Request, payload: Dict) -> None:
+        """Queue a prefilled request whose KV transfer just landed.
+        Mirrors ``SimReplica.accept_handoff``: back of its tenant queue
+        at the original enqueue timestamp, estimate untouched; the KV
+        payload is injected into the paged pool when a slot dispatches
+        it."""
+        self._pending_injections[req.req_id] = payload
+        self.sched.queues.enqueue(req, req.enqueue_time)
+
+    def pop_pending_injection(self, req_id: int) -> Optional[Dict]:
+        """Detach a queued request's undispatched KV payload (the
+        cluster driver re-transfers it when the request is stolen off
+        this engine's queue)."""
+        return self._pending_injections.pop(req_id, None)
+
+    def _admit_prefilled(self, req: Request, slot: int, payload: Dict,
+                         now: float) -> None:
+        """Open a slot for a request that already prefilled elsewhere:
+        allocate pages, write the transferred KV into them, and enter
+        decode directly (no prefill chunks, no first token — both
+        happened on the source replica)."""
+        assert self.ecfg.paged, "KV injection requires the paged pool"
+        self.ledger.admit(slot, payload["seq_len"], (), now)
+        pages = jnp.asarray(self.ledger.table(slot), jnp.int32)
+        from .kv_cache import PagedPool
+        self.pool = PagedPool(
+            k=self.pool.k.at[:, pages].set(
+                jnp.asarray(payload["k"]).astype(self.pool.k.dtype)),
+            v=self.pool.v.at[:, pages].set(
+                jnp.asarray(payload["v"]).astype(self.pool.v.dtype)),
+            page_size=self.ecfg.page_size)
+        st = self.slots[slot]
+        st.req = req
+        st.generated = payload["generated"]
+        st.target = payload["target"]
+        st.last_token = payload["last_token"]
+        st.prompt_len = payload["prompt_len"]
+        st.cached_tokens = 0
+        st.prefill_remaining = 0
+        st.pending_prefill = False
+        st.batch = None
+        st.bucket = payload["bucket"]
+        st.prefill_pos = payload["seq_len"]
+        self._join_order.append(slot)
+        req.state = RequestState.EXECUTING
+        if req.exec_start is None:
+            req.exec_start = now
+
+    def abort_all(self, now: float) -> List[Request]:
+        """Failure path: drop every in-flight slot and pending KV
+        injection; stranded requests go back to the caller (the cluster
+        driver resets and reroutes them). Pool contents die with the
+        replica, so a prefix tree is emptied too."""
+        stranded = []
+        for slot in list(self._join_order):
+            stranded.append(self.slots[slot].req)
+            self._release_slot(slot)
+        self._pending_injections.clear()
+        if self.prefix_tree is not None:
+            self.prefix_tree.clear()
+        return stranded
 
     def _retire(self, slot: int, now: float) -> None:
         st = self.slots[slot]
@@ -455,7 +643,11 @@ class ServingEngine:
             req = self.sched.dispatch(now)
             if req is None:
                 break
-            self._admit(req, slot, now)
+            payload = self._pending_injections.pop(req.req_id, None)
+            if payload is not None:
+                self._admit_prefilled(req, slot, payload, now)
+            else:
+                self._admit(req, slot, now)
             joined += 1
 
         # chunked prefill: apportion the per-step budget in join order;
@@ -474,7 +666,11 @@ class ServingEngine:
                 self.trace.emit(now, tr.PREFILL_CHUNK,
                                 req_id=st.req.req_id, rid=self.trace_rid,
                                 tenant=st.req.tenant.label, tokens=take)
-            if st.prefill_remaining <= 0:
+            if self._chunked_device_prefill:
+                # every chunk executes on device the iteration its
+                # budget is consumed (fused chunked-prefill kernel)
+                self._advance_prefill(slot, take, now)
+            elif st.prefill_remaining <= 0:
                 self._run_prefill(slot, now)
             if budget <= 0:
                 break
@@ -502,10 +698,18 @@ class ServingEngine:
                 if sid is None:
                     pt[i, :] = scratch
             lens = self.ledger.lens_array(sids)
+            # static page-grid trim for the batched kernel: next power
+            # of two above the deepest live sequence (bounded set of
+            # jit variants), clamped to the table width
+            needed = max(1, -(-int(lens.max()) // self.ecfg.page_size))
+            max_pages = 1
+            while max_pages < needed:
+                max_pages *= 2
+            max_pages = min(max_pages, self.alloc.pages_per_seq)
             toks, new_pool = self._decode_paged(
                 self.params, {"k": self.pool.k, "v": self.pool.v},
                 jnp.asarray(tokens), jnp.asarray(pt),
-                jnp.asarray(lens), sub)
+                jnp.asarray(lens), sub, max_pages=max_pages)
             from .kv_cache import PagedPool
             self.pool = PagedPool(k=new_pool["k"], v=new_pool["v"],
                                   page_size=self.ecfg.page_size)

@@ -30,9 +30,14 @@ skip of these tests as a failure (a silent JAX-import skip would make
 the parity contract vacuous).
 """
 
+import math
+
 import jax
 import pytest
 
+from repro.cluster.driver import make_engine_cluster
+from repro.cluster.replica import ReplicaRole
+from repro.cluster.simulator import ClusterConfig, ClusterSimulator
 from repro.configs import smoke_config
 from repro.core.scheduler import DriftScheduler
 from repro.models.registry import get_api
@@ -304,6 +309,40 @@ def test_engine_prefix_page_conservation_after_drain():
     assert eng.alloc.free_pages == eng.alloc.n_pages
 
 
+# ----------------------------------------------------------------------
+# Per-chunk device execution: the fused chunked-prefill kernel runs
+# every budget grant the iteration it lands (no single-shot remainder)
+# ----------------------------------------------------------------------
+
+def test_engine_prefill_executes_per_chunk():
+    """A paged engine with a chunk budget launches one device prefill
+    per consumed chunk — ``ceil(prompt/chunk)`` launches for a lone
+    request (the final launch extends through the bucket padding so
+    the whole bucket is resident for decode), never a single deferred
+    whole-bucket prefill."""
+    reqs = _requests(1, seed=43)
+    prompt = reqs[0].prompt_tokens
+    assert prompt > 16, "need a multi-chunk prompt"
+    sched, eng = _run_engine(reqs, chunk=16)
+    assert eng.n_prefill_launches == math.ceil(prompt / 16)
+    slots = {s for s, _ in eng.prefill_chunk_log}
+    assert len(slots) == 1
+    # the executed chunk lengths tile the bucket exactly
+    assert sum(n for _, n in eng.prefill_chunk_log) == BUCKET
+
+
+def test_engine_prefill_chunk_launch_accounting_multislot():
+    """Concurrent prefills: every request's executed chunks tile its
+    bucket, and the launch count is the per-chunk total — strictly more
+    launches than requests (per-chunk execution, not one-shot)."""
+    reqs = _requests(12, seed=31)
+    assert any(r.prompt_tokens > 16 for r in reqs)
+    sched, eng = _run_engine(reqs, chunk=16)
+    assert eng.n_prefill_launches == len(eng.prefill_chunk_log)
+    assert eng.n_prefill_launches > len(reqs)
+    assert sum(n for _, n in eng.prefill_chunk_log) == BUCKET * len(reqs)
+
+
 def test_engine_chunk_budget_conserves_tokens():
     """Chunked prefill consumes exactly the uncached prompt: realized
     cache credit + chunked prefill == prompt for every request, and a
@@ -320,3 +359,299 @@ def test_engine_chunk_budget_conserves_tokens():
     for r in sched_b.completed:
         assert r.prefill_end is not None
         assert r.prefill_end <= r.exec_end
+
+
+# ----------------------------------------------------------------------
+# P/D disaggregation: engine cluster vs cluster simulator
+# ----------------------------------------------------------------------
+# Matched two-replica pool (one prefill + one decode engine) so the
+# stage-2 placement has a single destination — routing-load feedback
+# cannot diverge and parity isolates the handoff protocol itself. The
+# KV delay is constant (per-token cost zero) so transfer arrival order
+# equals prefill completion order on both executors.
+#
+# Completion *tie groups* are not comparable across executors here:
+# the engine steps every replica on one lockstep ``dt`` clock while
+# the simulator prices prefill and decode iterations at very different
+# durations, so handed-off work joins the decode replica in different
+# cohort sizes. The order-bearing P/D signals — TTFT anchors (stamped
+# at the prefill-completing iteration) and handoff arrival order — are
+# compared tie-exact; full completion order is compared on a capped
+# workload where it is cohort-independent.
+
+def _run_engine_pd(reqs, *, chunk=16, kv_base=0.002):
+    drv = make_engine_cluster(
+        CFG, PARAMS, 2, policy="fifo", routing="pd_disaggregated",
+        engine_config=EngineConfig(n_slots=SLOTS, max_len=96,
+                                   prompt_buckets=(BUCKET,),
+                                   paged=True, page_size=PAGE,
+                                   chunk_prefill_tokens=chunk),
+        n_prefill_replicas=1,
+        kv_transfer_base=kv_base, kv_transfer_per_token=0.0)
+    for i, r in enumerate(reqs):
+        assert drv.submit(r, 1e-6 * i)
+    m = drv.run_until_drained(max_steps=20_000)
+    assert m.n_completed == len(reqs)
+    return drv
+
+
+def _run_sim_pd(reqs, *, chunk=16, kv_base=0.002):
+    plan = ArrivalPlan(
+        calibration=[(1e-6 * i, r) for i, r in enumerate(reqs)],
+        stress=[],
+        config=GeneratorConfig(total_requests=len(reqs),
+                               calibration_requests=len(reqs)))
+    sim = ClusterSimulator(plan, ClusterConfig(
+        n_replicas=2, routing="pd_disaggregated", n_prefill_replicas=1,
+        scheduler_policy="fifo", batch_capacity=SLOTS, step_engine=True,
+        continuous_joins=True, chunk_prefill_tokens=chunk,
+        prefix_page_tokens=PAGE,
+        kv_transfer_base=kv_base, kv_transfer_per_token=0.0, seed=0),
+        cost_model=replace(L4_QWEN_1_8B, jitter_sigma=0.0))
+    m = sim.run()
+    assert m.run.n_completed == len(reqs)
+    return sim
+
+
+def _pd_done(reqs, replicas):
+    idx = {r.req_id: i for i, r in enumerate(reqs)}
+    done = [r for rep in replicas for r in rep.sched.completed]
+    assert len(done) == len(reqs)
+    return idx, done
+
+
+def _stamp_groups(idx, done, stamp):
+    out, seen = [], {}
+    for r in sorted(done, key=lambda r: (stamp(r), idx[r.req_id])):
+        t = stamp(r)
+        if t not in seen:
+            seen[t] = set()
+            out.append(t)
+        seen[t].add(idx[r.req_id])
+    return [frozenset(seen[t]) for t in out]
+
+
+def test_pd_parity_ttft_and_handoff_anchors():
+    """Engine-backed P/D vs the cluster simulator at a matched seed:
+    observed lengths agree per request, every request prefills on the
+    prefill replica and decodes on the decode replica, and both TTFT
+    anchors (prefill-completing iteration) and KV-arrival order match
+    tie-exact."""
+    def mixed(reqs):
+        # plant varied oracle lengths (the generator's calibration
+        # outputs all hit the cap) — identical on both sides
+        for i, r in enumerate(reqs):
+            r.true_output_tokens = 3 + (5 * i) % 20
+        return reqs
+    reqs_e = mixed(_requests(16, seed=11))
+    reqs_s = mixed(_requests(16, seed=11))
+    drv = _run_engine_pd(reqs_e)
+    sim = _run_sim_pd(reqs_s)
+    assert drv.n_handoffs == sim.n_handoffs == 16
+    ie, de = _pd_done(reqs_e, drv.replicas)
+    is_, ds = _pd_done(reqs_s, sim.replicas)
+    assert sorted((ie[r.req_id], r.observed_output_tokens) for r in de) == \
+        sorted((is_[r.req_id], r.observed_output_tokens) for r in ds)
+    for idx, done in ((ie, de), (is_, ds)):
+        assert all(r.prefill_rid == 0 and r.decode_rid == 1 for r in done)
+        assert all(r.handoff_time is not None
+                   and r.handoff_time >= r.prefill_end for r in done)
+        assert all(r.ttft < r.e2e_latency for r in done)
+    assert _stamp_groups(ie, de, lambda r: r.prefill_end) == \
+        _stamp_groups(is_, ds, lambda r: r.prefill_end)
+    assert _stamp_groups(ie, de, lambda r: r.handoff_time) == \
+        _stamp_groups(is_, ds, lambda r: r.handoff_time)
+
+
+def test_pd_parity_completion_order_capped():
+    """On a target-capped workload (completion order is decided by
+    handoff order, independent of join-cohort sizes) the end-to-end
+    completion order matches the simulator exactly."""
+    reqs_e = _requests(16, seed=11)          # MAX_TOKENS caps every target
+    reqs_s = _requests(16, seed=11)
+    assert all(min(r.true_output_tokens, r.max_tokens) == MAX_TOKENS
+               for r in reqs_e)
+    drv = _run_engine_pd(reqs_e)
+    sim = _run_sim_pd(reqs_s)
+    ie, de = _pd_done(reqs_e, drv.replicas)
+    is_, ds = _pd_done(reqs_s, sim.replicas)
+    order_e = [ie[r.req_id]
+               for r in sorted(de, key=lambda r: (r.exec_end, ie[r.req_id]))]
+    order_s = [is_[r.req_id]
+               for r in sorted(ds, key=lambda r: (r.exec_end, is_[r.req_id]))]
+    assert order_e == order_s
+
+
+def test_pd_engine_page_movement_and_conservation():
+    """The handoff moves real pages: prefill happens only on the
+    prefill engine (its chunk launches cover every prompt), decode-side
+    pages are injected (zero prefill launches there), drift feedback
+    fires exactly once per request attributed to the decode phase, and
+    after the drain every page on every engine is back in its free
+    pool."""
+    reqs = _requests(16, seed=13)
+    drv = _run_engine_pd(reqs)
+    pre, dec = drv.replicas
+    assert pre.role is ReplicaRole.PREFILL
+    assert dec.role is ReplicaRole.DECODE
+    # prefill ran (per-chunk) only on the prefill engine
+    assert pre.engine.n_prefill_launches > 0
+    assert dec.engine.n_prefill_launches == 0
+    assert sum(n for _, n in pre.engine.prefill_chunk_log) == \
+        BUCKET * len(reqs)
+    # the prefill engine never completes anything; the decode engine
+    # completes everything
+    assert len(pre.sched.completed) == 0
+    assert len(dec.sched.completed) == len(reqs)
+    assert pre.n_handoffs_out == dec.n_handoffs_in == len(reqs)
+    # at-most-once drift feedback, attributed to decode
+    phases = {}
+    for rep in drv.replicas:
+        for k, v in rep.sched.phase_feedback_counts.items():
+            phases[k] = phases.get(k, 0) + v
+    assert phases == {"decode": len(reqs)}
+    # page conservation: both pools fully free, no transfer stranded
+    assert not drv._in_transit
+    for rep in drv.replicas:
+        assert rep.engine.alloc.free_pages == rep.engine.alloc.n_pages
+        assert rep.engine.ledger.owned_pages() == 0
+
+
+def test_pd_engine_failure_reprefill():
+    """Failure-safe re-prefill over live engines: killing the decode
+    engine mid-run loses its injected pages; stranded requests reset to
+    the pre-prefill state, reroute through stage-1 routing, prefill
+    again, and every request still completes with exactly one drift
+    feedback."""
+    reqs = _requests(14, seed=17)
+    drv = make_engine_cluster(
+        CFG, PARAMS, 3, policy="fifo", routing="pd_disaggregated",
+        engine_config=EngineConfig(n_slots=SLOTS, max_len=96,
+                                   prompt_buckets=(BUCKET,),
+                                   paged=True, page_size=PAGE,
+                                   chunk_prefill_tokens=16),
+        n_prefill_replicas=1,
+        kv_transfer_base=0.002, kv_transfer_per_token=0.0)
+    for i, r in enumerate(reqs):
+        assert drv.submit(r, 1e-6 * i)
+    now, steps = 0.0, 0
+    while not drv.replicas[1].engine.active_slots():
+        drv.step(now)
+        now += 1.0
+        steps += 1
+        assert steps < 1000, "decode replica never became active"
+    drv.fail_replica(1, now)
+    assert drv.n_rerouted > 0
+    while not drv._drained():
+        drv.step(now)
+        now += 1.0
+        steps += 1
+        assert steps < 20_000, "cluster failed to drain after failure"
+    done = [r for rep in drv.replicas for r in rep.sched.completed]
+    assert len(done) == len(reqs)
+    # work that died on the decode engine prefilled twice -> extra
+    # handoffs beyond one per request
+    assert drv.n_handoffs > len(reqs)
+    assert all(r.decode_rid == 2 for r in done
+               if r.handoff_time is not None)
+    phases = {}
+    for rep in drv.replicas:
+        for k, v in rep.sched.phase_feedback_counts.items():
+            phases[k] = phases.get(k, 0) + v
+    assert sum(phases.values()) == len(reqs)
+    for rep in drv.replicas:
+        if rep.rid != 1:        # the dead pool keeps its last state
+            assert rep.engine.alloc.free_pages == rep.engine.alloc.n_pages
+
+
+def test_pd_engine_transfer_loss_on_source_failure():
+    """A KV transfer in flight when its source prefill engine dies is
+    lost (the payload pages existed only there): the request re-runs
+    prefill on the surviving prefill engine and completes."""
+    reqs = _requests(8, seed=19)
+    drv = make_engine_cluster(
+        CFG, PARAMS, 4, policy="fifo", routing="pd_disaggregated",
+        engine_config=EngineConfig(n_slots=SLOTS, max_len=96,
+                                   prompt_buckets=(BUCKET,),
+                                   paged=True, page_size=PAGE,
+                                   chunk_prefill_tokens=16),
+        n_prefill_replicas=2,
+        kv_transfer_base=50.0, kv_transfer_per_token=0.0)  # long flight
+    for i, r in enumerate(reqs):
+        assert drv.submit(r, 1e-6 * i)
+    now, steps = 0.0, 0
+    while not any(t.src_rid == 0 for t in drv._in_transit.values()):
+        drv.step(now)
+        now += 1.0
+        steps += 1
+        assert steps < 1000, "no transfer ever departed replica 0"
+    drv.fail_replica(0, now)
+    assert drv.n_handoffs_lost > 0
+    while not drv._drained():
+        drv.step(now)
+        now += 1.0
+        steps += 1
+        assert steps < 20_000
+    done = [r for rep in drv.replicas for r in rep.sched.completed]
+    assert len(done) == len(reqs)
+    # every completed request decoded from a transfer that survived:
+    # its prefill ran on the surviving prefill engine (rid 1) if its
+    # original KV was lost
+    assert all(r.prefill_rid in (0, 1) for r in done)
+    assert any(r.prefill_rid == 1 for r in done)
+
+
+def test_pd_engine_work_stealing_retransfers_kv():
+    """Decode-ready work stolen off a backlogged decode engine pays a
+    fresh KV transfer: the payload detaches from the victim queue and
+    lands on the thief, which completes it."""
+    reqs = _requests(16, seed=23)
+    drv = make_engine_cluster(
+        CFG, PARAMS, 3, policy="fifo", routing="pd_disaggregated",
+        engine_config=EngineConfig(n_slots=2, max_len=96,
+                                   prompt_buckets=(BUCKET,),
+                                   paged=True, page_size=PAGE,
+                                   chunk_prefill_tokens=16),
+        n_prefill_replicas=1,
+        kv_transfer_base=0.002, kv_transfer_per_token=0.0,
+        work_stealing=True, steal_min_depth=2)
+    # hold one decode engine out of the pool so every handoff piles
+    # onto the other, then bring it back as an idle thief
+    drv.fail_replica(2, 0.0)
+    for i, r in enumerate(reqs):
+        assert drv.submit(r, 1e-6 * i)
+    now, steps = 0.0, 0
+    while drv.replicas[1].queue_depth() < 4:
+        drv.step(now)
+        now += 1.0
+        steps += 1
+        assert steps < 2000, "victim queue never built a backlog"
+    drv.recover_replica(2, now)
+    while not drv._drained():
+        drv.step(now)
+        now += 1.0
+        steps += 1
+        assert steps < 20_000
+    done = [r for rep in drv.replicas for r in rep.sched.completed]
+    assert len(done) == len(reqs)
+    assert drv.n_stolen > 0
+    thief = drv.replicas[2]
+    assert thief.n_stolen_in > 0
+    stolen_done = [r for r in done if r.n_steals > 0]
+    assert stolen_done
+    assert all(r.decode_rid == 2 for r in stolen_done)
+    for rep in drv.replicas:
+        assert rep.engine.alloc.free_pages == rep.engine.alloc.n_pages
+
+
+def test_pd_engine_cluster_determinism():
+    """Two identical engine-cluster P/D runs produce identical
+    completion stamps."""
+    def one():
+        reqs = _requests(12, seed=29)
+        drv = _run_engine_pd(reqs)
+        idx, done = _pd_done(reqs, drv.replicas)
+        return sorted((idx[r.req_id], r.observed_output_tokens,
+                       r.prefill_end, r.handoff_time, r.exec_end)
+                      for r in done)
+    assert one() == one()

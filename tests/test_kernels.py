@@ -6,8 +6,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import flash_attention, paged_decode_attention, ssd_scan
+from repro.kernels import (
+    batched_paged_decode_attention,
+    chunked_prefill_attention,
+    flash_attention,
+    paged_decode_attention,
+    ssd_scan,
+)
 from repro.kernels import ref
+from repro.kernels.paged_attention import safe_page_index
 
 
 def _rand(key, shape, dtype):
@@ -148,6 +155,222 @@ def test_paged_equals_contiguous():
     expect = ref.decode_attention_ref(q, k_cache, v_cache, lens)
     np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
                                atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# batched paged decode (whole decode set, fused new-token K/V)
+# ---------------------------------------------------------------------------
+
+def _page_scene(key, B, Hk, D, page, pps, dtype, extra=3):
+    """Random pool + non-overlapping per-sequence page tables."""
+    ks = jax.random.split(key, 3)
+    n_pages = B * pps + extra
+    k_pages = _rand(ks[0], (n_pages, page, Hk, D), dtype)
+    v_pages = _rand(ks[1], (n_pages, page, Hk, D), dtype)
+    perm = jax.random.permutation(ks[2], n_pages)[:B * pps]
+    page_table = perm.reshape(B, pps).astype(jnp.int32)
+    return k_pages, v_pages, page_table
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("max_pages", [None, "trim"])
+def test_batched_paged_decode_vs_per_sequence(dtype, max_pages):
+    """The batched kernel == scatter-then-per-sequence decode calls."""
+    key = jax.random.PRNGKey(10)
+    ks = jax.random.split(key, 4)
+    B, H, Hk, D, page, pps = 3, 4, 2, 32, 8, 6
+    k_pages, v_pages, page_table = _page_scene(ks[0], B, Hk, D, page, pps,
+                                               dtype)
+    q = _rand(ks[1], (B, H, D), dtype)
+    k_new = _rand(ks[2], (B, Hk, D), dtype)
+    v_new = _rand(ks[3], (B, Hk, D), dtype)
+    seq_lens = jnp.array([5, 17, 29], jnp.int32)
+    mp = None if max_pages is None else max(1, -(-29 // page))
+    got = batched_paged_decode_attention(
+        q, k_pages, v_pages, page_table, seq_lens, k_new, v_new,
+        max_pages=mp, interpret=True)
+    # per-sequence baseline: scatter the new token, then one legacy
+    # kernel call per sequence over seq_lens + 1 tokens
+    phys = page_table[jnp.arange(B), seq_lens // page]
+    k_sc = k_pages.at[phys, seq_lens % page].set(k_new)
+    v_sc = v_pages.at[phys, seq_lens % page].set(v_new)
+    for b in range(B):
+        single = paged_decode_attention(
+            q[b:b + 1], k_sc, v_sc, page_table[b:b + 1],
+            seq_lens[b:b + 1] + 1, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(got[b], np.float32), np.asarray(single[0], np.float32),
+            **_tol(dtype), err_msg=f"seq {b}")
+    expect = ref.batched_paged_decode_attention_ref(
+        q, k_pages, v_pages, page_table, seq_lens, k_new, v_new)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+def test_batched_paged_decode_softcap():
+    key = jax.random.PRNGKey(11)
+    ks = jax.random.split(key, 4)
+    B, H, Hk, D, page, pps = 2, 8, 2, 16, 8, 4
+    k_pages, v_pages, page_table = _page_scene(ks[0], B, Hk, D, page, pps,
+                                               jnp.float32)
+    q = _rand(ks[1], (B, H, D), jnp.float32)
+    k_new = _rand(ks[2], (B, Hk, D), jnp.float32)
+    v_new = _rand(ks[3], (B, Hk, D), jnp.float32)
+    seq_lens = jnp.array([0, 23], jnp.int32)   # incl. empty pool (first token)
+    got = batched_paged_decode_attention(
+        q, k_pages, v_pages, page_table, seq_lens, k_new, v_new,
+        logit_softcap=30.0, interpret=True)
+    expect = ref.batched_paged_decode_attention_ref(
+        q, k_pages, v_pages, page_table, seq_lens, k_new, v_new,
+        logit_softcap=30.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused chunked prefill
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("chunk,cached,group", [
+    (16, 0, 1),     # first chunk, MHA
+    (16, 16, 2),    # resume from one cached page row, GQA
+    (8, 24, 2),     # small slab deep in the sequence
+    (32, 32, 4),    # wide slab, wide GQA group
+    (12, 20, 1),    # non-page-aligned slab boundary
+])
+def test_chunked_prefill_vs_oracle(chunk, cached, group, dtype):
+    key = jax.random.PRNGKey(12)
+    ks = jax.random.split(key, 2)
+    B, Hk, D, page, pps = 2, 2, 32, 8, 12
+    H = Hk * group
+    k_pages, v_pages, page_table = _page_scene(ks[0], B, Hk, D, page, pps,
+                                               dtype)
+    q = _rand(ks[1], (B, chunk, H, D), dtype)
+    # second sequence resumes from a non-page-aligned offset
+    q_offsets = jnp.array([cached, max(0, cached - 3)], jnp.int32)
+    kv_lens = q_offsets + chunk
+    got = chunked_prefill_attention(
+        q, k_pages, v_pages, page_table, q_offsets, kv_lens, interpret=True)
+    expect = ref.chunked_prefill_attention_ref(
+        q, k_pages, v_pages, page_table, q_offsets, kv_lens)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+def test_chunked_prefill_softcap_vs_oracle():
+    key = jax.random.PRNGKey(13)
+    ks = jax.random.split(key, 2)
+    B, chunk, Hk, group, D, page, pps = 1, 16, 2, 2, 16, 8, 8
+    k_pages, v_pages, page_table = _page_scene(ks[0], B, Hk, D, page, pps,
+                                               jnp.float32)
+    q = _rand(ks[1], (B, chunk, Hk * group, D), jnp.float32)
+    q_offsets = jnp.array([24], jnp.int32)
+    kv_lens = q_offsets + chunk
+    got = chunked_prefill_attention(
+        q, k_pages, v_pages, page_table, q_offsets, kv_lens,
+        logit_softcap=30.0, interpret=True)
+    expect = ref.chunked_prefill_attention_ref(
+        q, k_pages, v_pages, page_table, q_offsets, kv_lens,
+        logit_softcap=30.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_chunked_prefill_resumption_matches_full_causal(chunk):
+    """Prefilling T tokens slab by slab — each chunk attending the pages
+    written by chunks 0..N-1 — concatenates to one full causal pass."""
+    key = jax.random.PRNGKey(14)
+    ks = jax.random.split(key, 4)
+    T, H, Hk, D, page = 32, 4, 2, 16, 8
+    pps = T // page
+    n_pages = pps + 2
+    q_full = _rand(ks[0], (1, T, H, D), jnp.float32)
+    k_full = _rand(ks[1], (1, T, Hk, D), jnp.float32)
+    v_full = _rand(ks[2], (1, T, Hk, D), jnp.float32)
+    perm = jax.random.permutation(ks[3], n_pages)[:pps].astype(jnp.int32)
+    page_table = perm[None, :]
+    k_pages = jnp.zeros((n_pages, page, Hk, D), jnp.float32)
+    v_pages = jnp.zeros_like(k_pages)
+    outs = []
+    for s in range(0, T, chunk):
+        # the caller's contract: scatter the slab's K/V first...
+        for t in range(s, s + chunk):
+            k_pages = k_pages.at[perm[t // page], t % page].set(k_full[0, t])
+            v_pages = v_pages.at[perm[t // page], t % page].set(v_full[0, t])
+        # ...then attend it against everything resident so far
+        outs.append(chunked_prefill_attention(
+            q_full[:, s:s + chunk], k_pages, v_pages, page_table,
+            jnp.array([s], jnp.int32), jnp.array([s + chunk], jnp.int32),
+            interpret=True))
+    got = jnp.concatenate(outs, axis=1)
+    expect = ref.mha_naive(q_full, k_full, v_full, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# page-table tail poisoning (index-map clamp)
+# ---------------------------------------------------------------------------
+
+def test_safe_page_index_never_reads_poisoned_tail():
+    page = 8
+    page_table = jnp.array([[3, 9, 1, 777_777, -5, 123_456]], jnp.int32)
+    seq_lens = jnp.array([17], jnp.int32)        # 3 valid pages
+    valid = {3, 9, 1}
+    for p in range(page_table.shape[1]):
+        got = int(safe_page_index(page_table, seq_lens, 0, p, page))
+        assert got in valid, (p, got)
+        assert got == (int(page_table[0, p]) if p < 3 else 1)
+    # empty sequence: clamp to the first table entry, never past it
+    empty = jnp.array([0], jnp.int32)
+    for p in range(page_table.shape[1]):
+        assert int(safe_page_index(page_table, empty, 0, p, page)) == 3
+
+
+def test_paged_kernels_ignore_poisoned_tail_entries():
+    """Table slots past ceil(seq_len / page) are allocator garbage; all
+    three paged kernels must produce clean-table results anyway."""
+    key = jax.random.PRNGKey(15)
+    ks = jax.random.split(key, 4)
+    B, H, Hk, D, page, pps = 2, 4, 2, 32, 8, 6
+    k_pages, v_pages, clean = _page_scene(ks[0], B, Hk, D, page, pps,
+                                          jnp.float32)
+    n_pages = k_pages.shape[0]
+    seq_lens = jnp.array([11, 37], jnp.int32)
+    poisoned = np.asarray(clean).copy()
+    for b, n in enumerate([11, 37]):
+        poisoned[b, -(-n // page):] = n_pages * 13 + b   # far out of range
+    poisoned = jnp.asarray(poisoned)
+
+    q = _rand(ks[1], (B, H, D), jnp.float32)
+    got = paged_decode_attention(q, k_pages, v_pages, poisoned, seq_lens,
+                                 interpret=True)
+    expect = ref.paged_decode_attention_ref(q, k_pages, v_pages, clean,
+                                            seq_lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+    k_new = _rand(ks[2], (B, Hk, D), jnp.float32)
+    v_new = _rand(ks[3], (B, Hk, D), jnp.float32)
+    got = batched_paged_decode_attention(
+        q, k_pages, v_pages, poisoned, seq_lens, k_new, v_new,
+        interpret=True)
+    expect = ref.batched_paged_decode_attention_ref(
+        q, k_pages, v_pages, clean, seq_lens, k_new, v_new)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+    chunk = 8
+    qc = _rand(ks[1], (B, chunk, H, D), jnp.float32)
+    q_offsets = seq_lens - chunk
+    got = chunked_prefill_attention(
+        qc, k_pages, v_pages, poisoned, q_offsets, seq_lens, interpret=True)
+    expect = ref.chunked_prefill_attention_ref(
+        qc, k_pages, v_pages, clean, q_offsets, seq_lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
 
 
 # ---------------------------------------------------------------------------
